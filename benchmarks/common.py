@@ -1,0 +1,48 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.models.param import init_params
+
+# Scale factor for benchmark sizes (rounds); BENCH_SCALE=0.2 for quick runs.
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def rounds(n: int) -> int:
+    return max(2, int(n * SCALE))
+
+
+def run_algo(algo: str, loss_fn, dataset, specs, *, mu: float = 0.0,
+             num_rounds: int = 10, devices_per_round: int = 10,
+             local_epochs: int = 5, lr: float = 0.01, seed: int = 1,
+             eval_every: int = 1000, correction_decay: float = 1.0,
+             num_devices=None) -> Dict:
+    cfg = FederatedConfig(
+        algorithm=algo, num_devices=num_devices or dataset.num_devices,
+        devices_per_round=devices_per_round, local_epochs=local_epochs,
+        learning_rate=lr, mu=mu, seed=seed,
+        correction_decay=correction_decay)
+    tr = FederatedTrainer(loss_fn, dataset, cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    st = tr.init(params)
+    t0 = time.time()
+    losses = [tr.global_loss(params)]
+    for t in range(num_rounds):
+        st = tr.round(st)
+        if (t + 1) % eval_every == 0 or t == num_rounds - 1:
+            losses.append(tr.global_loss(st.params))
+    return {"algo": algo, "losses": losses, "final": losses[-1],
+            "initial": losses[0], "comm_rounds": st.comm_rounds,
+            "wall_s": time.time() - t0}
+
+
+def emit(name: str, wall_s: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{wall_s * 1e6:.0f},{derived}")

@@ -1,0 +1,58 @@
+"""Roofline table: aggregates the dry-run JSONs (experiments/dryrun/) into
+the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+import glob
+import json
+import os
+import sys
+
+HDR = ("arch", "shape", "mesh", "algo", "dominant", "compute_ms",
+       "memory_ms", "collective_ms", "flops/dev", "traffic/dev", "coll/dev",
+       "useful_ratio", "temp_GiB")
+
+
+def load(dirname="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "skipped":
+            rows.append([r["arch"], r["shape"], r["mesh"], r["algo"],
+                         "SKIP", "-", "-", "-", "-", "-", "-", "-", "-"])
+            continue
+        if r.get("status") != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], r.get("algo", ""),
+                         "ERROR", "-", "-", "-", "-", "-", "-", "-", "-"])
+            continue
+        t = r["roofline_terms_s"]
+        mem = r.get("memory_analysis", {})
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["algo"],
+            r["dominant"].replace("_s", ""),
+            f"{t['compute_s'] * 1e3:.1f}", f"{t['memory_s'] * 1e3:.1f}",
+            f"{t['collective_s'] * 1e3:.1f}",
+            f"{r['hlo_flops_per_device']:.2e}",
+            f"{r['hlo_traffic_bytes_per_device']:.2e}",
+            f"{r['collective_bytes_total']:.2e}",
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{mem.get('temp_size_in_bytes', 0) / 2**30:.1f}",
+        ])
+    return rows
+
+
+def main(dirname="experiments/dryrun", markdown=False):
+    rows = load(dirname)
+    if markdown:
+        print("| " + " | ".join(HDR) + " |")
+        print("|" + "---|" * len(HDR))
+        for r in rows:
+            print("| " + " | ".join(str(x) for x in r) + " |")
+    else:
+        print(",".join(HDR))
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    print(f"# {len(rows)} dry-run records", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or ["experiments/dryrun"]),
+         markdown="--markdown" in sys.argv)

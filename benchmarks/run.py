@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one module per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,...]
+  BENCH_SCALE=0.3 PYTHONPATH=src python -m benchmarks.run   # faster
+"""
+import os
+import sys
+import time
+
+
+def main() -> None:
+    only = None
+    if "--only" in sys.argv:
+        only = set(sys.argv[sys.argv.index("--only") + 1].split(","))
+
+    from benchmarks import (fig1_convergence, fig2_participation,
+                            fig3_unrealistic, fig4_variants, kernelbench,
+                            table1_datasets)
+    modules = [
+        ("table1", table1_datasets),
+        ("fig1", fig1_convergence),
+        ("fig2", fig2_participation),
+        ("fig3", fig3_unrealistic),
+        ("fig4", fig4_variants),
+        ("kernels", kernelbench),
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in modules:
+        if only and name not in only:
+            continue
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name}_ERROR,0,{e!r}")
+    # roofline table (if dry-run artifacts exist)
+    if os.path.isdir("experiments/dryrun") and (not only
+                                                or "roofline" in only):
+        from benchmarks import roofline
+        roofline.main()
+    print(f"total,{(time.time() - t0) * 1e6:.0f},all_benchmarks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table I reproduction: statistics of the three (procedural) federated
+datasets — devices, samples, mean/stdev samples per device."""
+import time
+
+from benchmarks.common import emit
+from repro.data import (make_femnist_like, make_sent140_like,
+                        make_shakespeare_like)
+
+# paper's Table I targets
+TARGETS = {
+    "femnist_like": dict(devices=200, mean=92, stdev=159),
+    "sent140_like": dict(devices=772, mean=53, stdev=32),
+    "shakespeare_like": dict(devices=143, mean=3616, stdev=6808),
+}
+
+
+def main():
+    t0 = time.time()
+    makers = {
+        "femnist_like": lambda: make_femnist_like(num_devices=200, seed=0),
+        "sent140_like": lambda: make_sent140_like(num_devices=772, seed=0),
+        # full-sample shakespeare is CPU-prohibitive; cap per-device samples
+        "shakespeare_like": lambda: make_shakespeare_like(
+            num_devices=143, seed=0, sample_cap=256),
+    }
+    for name, make in makers.items():
+        t1 = time.time()
+        ds = make()
+        s = ds.stats()
+        tgt = TARGETS[name]
+        emit(f"table1_{name}", time.time() - t1,
+             f"devices={s['devices']}(target {tgt['devices']}) "
+             f"samples={s['samples']} mean={s['mean']:.0f} "
+             f"stdev={s['stdev']:.0f}")
+    emit("table1_total", time.time() - t0, "ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Beyond-paper example: the §V-C FedDANE variants, head to head.
+
+The paper suggests (but does not implement) two fixes for FedDANE's
+underwhelming performance:
+- DECAYED gradient correction (anneals FedDANE into FedProx)
+- PIPELINED single-round updates with a stale correction
+
+Run both against FedDANE / FedProx / SCAFFOLD on heterogeneous synthetic
+data and print loss-vs-COMMUNICATION (the paper counts FedDANE's two
+rounds per update honestly).
+
+  PYTHONPATH=src python examples/feddane_variants.py
+"""
+import jax
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+CASES = [
+    ("feddane", dict(mu=0.001)),
+    ("feddane_decayed", dict(mu=0.001, correction_decay=0.5)),
+    ("feddane_pipelined", dict(mu=1.0)),
+    ("fedprox", dict(mu=1.0)),
+    ("scaffold", dict(mu=0.0)),
+]
+
+
+def main():
+    dataset = make_synthetic(1, 1, num_devices=30, seed=0)
+    params0 = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    print(f"{'algorithm':20s} {'final loss':>10s} {'comm rounds':>12s}")
+    for algo, kw in CASES:
+        cfg = FederatedConfig(algorithm=algo, devices_per_round=10,
+                              local_epochs=5, learning_rate=0.01, seed=1,
+                              **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        hist = tr.run(params0, num_rounds=15, eval_every=15)
+        print(f"{algo:20s} {hist['loss'][-1]:>10.4f} "
+              f"{hist['comm_rounds'][-1]:>12d}")
+    print("\ndecayed FedDANE anneals toward FedProx (fixing divergence); "
+          "pipelined halves FedDANE's communication per update.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: reproduce the paper's headline result in ~a minute on CPU.
+
+FedDANE vs FedAvg vs FedProx on the Li et al. synthetic(1,1) heterogeneous
+federated dataset (30 devices, multinomial logistic regression) — FedDANE
+underperforms both baselines despite its Newton-type gradient correction.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+
+def main():
+    dataset = make_synthetic(1, 1, num_devices=30, seed=0)
+    print(f"dataset: {dataset.name} {dataset.stats()}")
+    params0 = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+
+    for algo, mu in [("fedavg", 0.0), ("fedprox", 1.0), ("feddane", 0.001)]:
+        cfg = FederatedConfig(algorithm=algo, devices_per_round=10,
+                              local_epochs=5, learning_rate=0.01, mu=mu,
+                              seed=1)
+        trainer = FederatedTrainer(logreg_loss, dataset, cfg)
+        hist = trainer.run(params0, num_rounds=15, eval_every=5)
+        losses = " -> ".join(f"{l:.3f}" for l in hist["loss"])
+        print(f"{algo:8s} (mu={mu}): loss {losses} "
+              f"[{hist['comm_rounds'][-1]} comm rounds]")
+
+    b = FederatedTrainer(logreg_loss, dataset,
+                         FederatedConfig()).measure_dissimilarity(params0)
+    print(f"\nB-dissimilarity at w0 (Definition 2): {b:.2f} "
+          f"(heterogeneous; IID would be ~1)")
+    print("paper's finding: FedDANE trails FedAvg/FedProx under "
+          "heterogeneity + partial participation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + greedy decode for any assigned arch.
+
+Exercises the same decode_step code path the dry-run lowers for the
+production mesh (KV ring-buffer caches, GQA cached attention, recurrent
+states for SSM/hybrid archs).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+  PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m --tokens 32
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(sys.argv[1:] or ["--arch", "qwen1.5-0.5b", "--tokens", "16"])
+
+
+if __name__ == "__main__":
+    main()

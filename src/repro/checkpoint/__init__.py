@@ -1,0 +1,5 @@
+"""Checkpointing (msgpack tensor store)."""
+from repro.checkpoint.store import (latest_checkpoint, load_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]

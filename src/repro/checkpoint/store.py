@@ -1,0 +1,87 @@
+"""Msgpack-based pytree checkpointing (orbax is not in the container).
+
+Stores arbitrary pytrees of jnp/np arrays + python scalars.  Arrays are
+serialized as raw bytes with dtype/shape headers; the tree structure is
+encoded as nested msgpack maps/lists.  Atomic rename on save.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARRAY_KEY = "__nd__"
+_TUPLE_KEY = "__tuple__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        a = np.asarray(obj)
+        return {_ARRAY_KEY: True, "dtype": a.dtype.str,
+                "shape": list(a.shape), "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {str(k): _pack(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE_KEY: [_pack(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_pack(v) for v in obj]
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARRAY_KEY):
+            a = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            return jnp.asarray(a.reshape(obj["shape"]))
+        if _TUPLE_KEY in obj:
+            return tuple(_unpack(v) for v in obj[_TUPLE_KEY])
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> str:
+    """Write ``tree`` to ``path`` (or ``path/ckpt_<step>.msgpack``)."""
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        path = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    else:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tree = jax.device_get(tree)
+    payload = msgpack.packb(_pack(tree), use_bin_type=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_checkpoint(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.msgpack$")
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = pat.match(name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = name, int(m.group(1))
+    return os.path.join(directory, best) if best else None

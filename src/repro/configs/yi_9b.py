@@ -1,0 +1,19 @@
+"""Yi-9B (llama-arch GQA) [arXiv:2403.04652].
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11_008,
+    vocab_size=64_000,
+    pattern=(ATTN,),
+    sliding_window=8192,
+    source="arXiv:2403.04652",
+)

@@ -1,0 +1,16 @@
+"""Federated optimization core: the paper's contribution (FedDANE + baselines)."""
+from repro.core.algorithms import (TWO_ROUND_ALGOS, FederatedState,
+                                   FederatedTrainer)
+from repro.core.client import (LocalResult, gamma_inexactness,
+                               make_exact_solver, make_grad_fn,
+                               make_local_solver)
+from repro.core.theory import (b_dissimilarity, corollary4_mu, rho_convex,
+                               rho_device_specific, rho_nonconvex)
+
+__all__ = [
+    "FederatedTrainer", "FederatedState", "TWO_ROUND_ALGOS",
+    "make_local_solver", "make_grad_fn", "make_exact_solver",
+    "gamma_inexactness", "LocalResult",
+    "b_dissimilarity", "rho_convex", "rho_nonconvex",
+    "rho_device_specific", "corollary4_mu",
+]

@@ -1,0 +1,213 @@
+"""Federated optimization algorithms (paper Alg. 1 & 2 + §V-C variants).
+
+``FederatedTrainer`` orchestrates simulation rounds over a federated
+dataset.  All algorithms share one jitted local solver (see client.py);
+they differ only in (corr, mu) handed to each selected device and in the
+communication pattern:
+
+- fedavg            McMahan et al. — Alg. 1
+- fedprox           Li et al. — proximal term only
+- feddane           Alg. 2 — two communication rounds per update
+- inexact_dane      Reddi et al. — FedDANE with full participation
+- feddane_pipelined §V-C — stale gradient correction, ONE round per update
+- feddane_decayed   §V-C — correction term decayed by ``correction_decay^t``
+- scaffold          Karimireddy et al. — control variates (beyond paper)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+from repro.core import pytree as pt
+from repro.core import server
+from repro.core.client import (LocalResult, gamma_inexactness, make_grad_fn,
+                               make_local_solver)
+
+TWO_ROUND_ALGOS = {"feddane", "inexact_dane"}
+
+
+@dataclass
+class FederatedState:
+    params: Any
+    round: int = 0
+    comm_rounds: int = 0
+    g_prev: Any = None                    # pipelined FedDANE stale gradient
+    controls: Optional[List[Any]] = None  # SCAFFOLD per-device c_k
+    c_server: Any = None                  # SCAFFOLD server c
+
+
+class FederatedTrainer:
+    """Simulates N devices + central server on one host (paper §V setup).
+
+    ``dataset`` must provide: ``num_devices``, ``weights`` (p_k, summing
+    to 1), ``device_batches(k)`` -> pytree of (num_batches, batch, ...),
+    and ``eval_batches()`` -> iterable over (weight, batches) per device.
+    """
+
+    def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
+                 eval_fn: Optional[Callable] = None):
+        self.loss_fn = loss_fn
+        self.dataset = dataset
+        self.cfg = cfg
+        self.eval_fn = eval_fn
+        self.rng = np.random.default_rng(cfg.seed)
+        self.solver = make_local_solver(
+            loss_fn, learning_rate=cfg.learning_rate,
+            num_epochs=cfg.local_epochs)
+        self.grad_fn = make_grad_fn(loss_fn)
+
+    # -- helpers ----------------------------------------------------------
+
+    def _sample(self) -> np.ndarray:
+        p = self.dataset.weights if self.cfg.weighted_sampling else None
+        return server.sample_devices(
+            self.rng, self.dataset.num_devices, self.cfg.devices_per_round,
+            p=p, replace=self.cfg.sample_with_replacement)
+
+    def _batches(self, k: int):
+        return self.dataset.device_batches(int(k))
+
+    def init(self, params) -> FederatedState:
+        st = FederatedState(params=params)
+        if self.cfg.algorithm == "scaffold":
+            st.controls = [pt.zeros_like(params)
+                           for _ in range(self.dataset.num_devices)]
+            st.c_server = pt.zeros_like(params)
+        if self.cfg.algorithm == "feddane_pipelined":
+            st.g_prev = pt.zeros_like(params)
+        return st
+
+    # -- algorithms -------------------------------------------------------
+
+    def round(self, st: FederatedState) -> FederatedState:
+        algo = self.cfg.algorithm
+        w0, mu = st.params, self.cfg.mu
+        zeros = pt.zeros_like(w0)
+
+        if algo in ("fedavg", "fedprox"):
+            S = self._sample()
+            mu_eff = 0.0 if algo == "fedavg" else mu
+            updates = [self.solver(w0, zeros, mu_eff, self._batches(k)).params
+                       for k in S]
+            st.params = server.aggregate_mean(updates)
+            st.comm_rounds += 1
+
+        elif algo in ("feddane", "inexact_dane", "feddane_decayed"):
+            # Phase A (Alg. 2 lines 3-6): approximate full gradient
+            if algo == "inexact_dane":
+                S1 = np.arange(self.dataset.num_devices)
+            else:
+                S1 = self._sample()
+            g_t = server.aggregate_gradients(
+                [self.grad_fn(w0, self._batches(k)) for k in S1])
+            decay = (self.cfg.correction_decay ** st.round
+                     if algo == "feddane_decayed" else 1.0)
+            # Phase B (lines 7-9): second subset solves the subproblem
+            S2 = (np.arange(self.dataset.num_devices)
+                  if algo == "inexact_dane" else self._sample())
+            updates = []
+            for k in S2:
+                bk = self._batches(k)
+                corr = pt.scale(pt.sub(g_t, self.grad_fn(w0, bk)), decay)
+                updates.append(self.solver(w0, corr, mu, bk).params)
+            st.params = server.aggregate_mean(updates)
+            st.comm_rounds += 2
+
+        elif algo == "feddane_pipelined":
+            # §V-C: one round — local solve uses the STALE g from the
+            # previous round; this round's gradients refresh it.
+            S = self._sample()
+            updates, grads = [], []
+            for k in S:
+                bk = self._batches(k)
+                gk = self.grad_fn(w0, bk)
+                grads.append(gk)
+                corr = pt.sub(st.g_prev, gk)
+                updates.append(self.solver(w0, corr, mu, bk).params)
+            st.params = server.aggregate_mean(updates)
+            st.g_prev = server.aggregate_gradients(grads)
+            st.comm_rounds += 1
+
+        elif algo == "scaffold":
+            S = self._sample()
+            steps = self.cfg.local_epochs * jax_nb(self._batches(int(S[0])))
+            updates = []
+            for k in S:
+                bk = self._batches(k)
+                corr = pt.sub(st.c_server, st.controls[int(k)])
+                res = self.solver(w0, corr, 0.0, bk)
+                updates.append(res.params)
+                nsteps = self.cfg.local_epochs * jax_nb(bk)
+                ck_new = pt.add(
+                    pt.sub(st.controls[int(k)], st.c_server),
+                    pt.scale(pt.sub(w0, res.params),
+                             1.0 / (nsteps * self.cfg.learning_rate)))
+                st.c_server = pt.add(
+                    st.c_server,
+                    pt.scale(pt.sub(ck_new, st.controls[int(k)]),
+                             1.0 / self.dataset.num_devices))
+                st.controls[int(k)] = ck_new
+            st.params = server.aggregate_mean(updates)
+            st.comm_rounds += 1
+
+        else:
+            raise ValueError(f"unknown algorithm {algo!r}")
+
+        st.round += 1
+        return st
+
+    # -- evaluation -------------------------------------------------------
+
+    def global_loss(self, params) -> float:
+        """f(w) = sum_k p_k F_k(w)  (eq. 1)."""
+        total, wsum = 0.0, 0.0
+        for wk, batches in self.dataset.eval_batches():
+            losses = self._device_loss(params, batches)
+            total += wk * float(losses)
+            wsum += wk
+        return total / max(wsum, 1e-12)
+
+    def _device_loss(self, params, batches):
+        import jax
+
+        @jax.jit
+        def f(p, b):
+            def body(acc, batch):
+                return acc + self.loss_fn(p, batch), None
+            s, _ = jax.lax.scan(body, 0.0, b)
+            nb = jax.tree_util.tree_leaves(b)[0].shape[0]
+            return s / nb
+        return f(params, batches)
+
+    def measure_dissimilarity(self, params) -> float:
+        from repro.core.theory import b_dissimilarity
+        grads = [self.grad_fn(params, self._batches(k))
+                 for k in range(self.dataset.num_devices)]
+        return b_dissimilarity(grads, self.dataset.weights)
+
+    def run(self, params, num_rounds: int, eval_every: int = 1,
+            verbose: bool = False) -> Dict[str, List[float]]:
+        st = self.init(params)
+        hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
+                                        "loss": []}
+        for t in range(num_rounds):
+            st = self.round(st)
+            if t % eval_every == 0 or t == num_rounds - 1:
+                loss = self.global_loss(st.params)
+                hist["round"].append(st.round)
+                hist["comm_rounds"].append(st.comm_rounds)
+                hist["loss"].append(loss)
+                if verbose:
+                    print(f"[{self.cfg.algorithm}] round {st.round:4d} "
+                          f"comm {st.comm_rounds:4d} loss {loss:.4f}")
+        hist["params"] = st.params  # type: ignore[assignment]
+        return hist
+
+
+def jax_nb(batches) -> int:
+    import jax
+    return jax.tree_util.tree_leaves(batches)[0].shape[0]

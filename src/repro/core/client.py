@@ -1,0 +1,129 @@
+"""Client-side local solvers.
+
+Every algorithm in the paper reduces to "run E epochs of minibatch SGD on a
+*perturbed* local objective": the perturbation is a linear term (gradient
+correction) plus a proximal term.  ``make_local_solver`` jit-compiles one
+scan-based solver per (loss_fn, batch-shape) and reuses it across devices
+and rounds; the perturbation state is traced arguments, so FedAvg/FedProx/
+FedDANE/SCAFFOLD all share one compiled executable.
+
+Device data arrives as fixed-shape padded batch stacks
+``(num_batches, batch_size, ...)`` with a per-example weight mask, produced
+by ``repro.data.batching`` (bucketed to bound recompilation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+
+class LocalResult(NamedTuple):
+    params: Any           # w_k^t
+    delta: Any            # w_k^t - w^{t-1}
+    num_steps: jnp.ndarray
+
+
+def make_local_solver(loss_fn: Callable, *, learning_rate: float,
+                      num_epochs: int) -> Callable:
+    """Build the jitted E-epoch SGD solver for DANE-type subproblems.
+
+    The solved objective is
+        F_k(w) + <corr, w - w0> + (mu/2) ||w - w0||^2
+    whose gradient is  grad F_k(w) + corr + mu (w - w0).
+
+    - FedAvg:   corr = 0,                         mu = 0
+    - FedProx:  corr = 0,                         mu > 0
+    - FedDANE:  corr = g_t - grad F_k(w0),        mu >= 0   (Alg. 2, eq. 3)
+    - SCAFFOLD: corr = c - c_k,                   mu = 0
+
+    ``batches``: pytree with leaves (num_batches, batch, ...); per-batch
+    loss must already be mask-aware (data layer contract).
+    Returns ``solve(w0, corr, mu, batches) -> LocalResult``.
+    """
+
+    @jax.jit
+    def solve(w0, corr, mu, batches) -> LocalResult:
+        grad_fn = jax.grad(loss_fn)
+
+        def batch_step(w, batch):
+            g = grad_fn(w, batch)
+            g = pt.add(g, corr)
+            g = pt.add(g, pt.scale(pt.sub(w, w0), mu))
+            return pt.sub(w, pt.scale(g, learning_rate)), None
+
+        def epoch(w, _):
+            w, _ = jax.lax.scan(batch_step, w, batches)
+            return w, None
+
+        w, _ = jax.lax.scan(epoch, w0, None, length=num_epochs)
+        nb = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        return LocalResult(w, pt.sub(w, w0),
+                           jnp.int32(num_epochs * nb))
+
+    return solve
+
+
+def make_grad_fn(loss_fn: Callable) -> Callable:
+    """Full local gradient over all of a device's (padded) batches.
+
+    Used for FedDANE phase A (line 5 of Alg. 2) and for the dissimilarity
+    instrumentation.  Returns the weighted mean gradient over batches.
+    """
+
+    @jax.jit
+    def full_grad(w, batches):
+        grad_fn = jax.grad(loss_fn)
+
+        def body(acc, batch):
+            g = grad_fn(w, batch)
+            wsum = batch["w"].sum() if isinstance(batch, dict) and "w" in batch \
+                else jnp.float32(1.0)
+            return (pt.add(acc[0], pt.scale(g, wsum)), acc[1] + wsum), None
+
+        zero = pt.zeros_like(w)
+        (gsum, wsum), _ = jax.lax.scan(body, (zero, jnp.float32(0.0)),
+                                       batches)
+        return pt.scale(gsum, 1.0 / jnp.maximum(wsum, 1e-9))
+
+    return full_grad
+
+
+def make_exact_solver(loss_fn: Callable, *, learning_rate: float,
+                      num_iters: int = 2000) -> Callable:
+    """Near-exact subproblem minimizer (long full-batch GD) for measuring
+    the γ-inexactness of the practical solver (Definition 1)."""
+
+    @jax.jit
+    def solve(w0, corr, mu, batches):
+        grad_fn = jax.grad(loss_fn)
+
+        def subproblem_grad(w):
+            def body(acc, batch):
+                g = grad_fn(w, batch)
+                wsum = batch["w"].sum() if isinstance(batch, dict) and "w" in batch \
+                    else jnp.float32(1.0)
+                return (pt.add(acc[0], pt.scale(g, wsum)), acc[1] + wsum), None
+            zero = pt.zeros_like(w)
+            (gs, ws), _ = jax.lax.scan(body, (zero, jnp.float32(0.0)), batches)
+            g = pt.scale(gs, 1.0 / jnp.maximum(ws, 1e-9))
+            g = pt.add(g, corr)
+            return pt.add(g, pt.scale(pt.sub(w, w0), mu))
+
+        def step(w, _):
+            return pt.sub(w, pt.scale(subproblem_grad(w), learning_rate)), None
+
+        w, _ = jax.lax.scan(step, w0, None, length=num_iters)
+        return w
+
+    return solve
+
+
+def gamma_inexactness(w_inexact, w_exact, w0) -> jnp.ndarray:
+    """Definition 1: ||w - w_exact|| <= gamma ||w_exact - w0||."""
+    denom = pt.norm(pt.sub(w_exact, w0))
+    return pt.norm(pt.sub(w_inexact, w_exact)) / jnp.maximum(denom, 1e-12)

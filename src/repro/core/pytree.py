@@ -1,0 +1,57 @@
+"""Pytree arithmetic used throughout the federated core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+def add(a, b):
+    return tmap(jnp.add, a, b)
+
+
+def sub(a, b):
+    return tmap(jnp.subtract, a, b)
+
+
+def scale(a, s):
+    return tmap(lambda x: x * s, a)
+
+
+def axpy(alpha, x, y):
+    """alpha * x + y"""
+    return tmap(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def zeros_like(a):
+    return tmap(jnp.zeros_like, a)
+
+
+def dot(a, b):
+    leaves = tmap(lambda x, y: jnp.vdot(x, y), a, b)
+    return sum(jax.tree_util.tree_leaves(leaves))
+
+
+def norm_sq(a):
+    return dot(a, a)
+
+
+def norm(a):
+    return jnp.sqrt(norm_sq(a))
+
+
+def mean(trees):
+    """Mean of a list of pytrees."""
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = add(acc, t)
+    return scale(acc, 1.0 / len(trees))
+
+
+def weighted_mean(trees, weights):
+    total = float(sum(weights))
+    acc = scale(trees[0], weights[0] / total)
+    for t, w in zip(trees[1:], weights[1:]):
+        acc = axpy(w / total, t, acc)
+    return acc

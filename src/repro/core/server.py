@@ -1,0 +1,37 @@
+"""Server side: device sampling and aggregation (Alg. 1/2 lines 3, 6-7, 9)."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import pytree as pt
+
+
+def sample_devices(rng: np.random.Generator, num_devices: int, k: int,
+                   p: Optional[Sequence[float]] = None,
+                   replace: bool = False) -> np.ndarray:
+    """Select |S_t| = K devices; each chosen with probability p_k (paper
+    line 3).  Without replacement, p is renormalized as numpy does."""
+    k = min(k, num_devices) if not replace else k
+    probs = None
+    if p is not None:
+        probs = np.asarray(p, dtype=np.float64)
+        probs = probs / probs.sum()
+    return rng.choice(num_devices, size=k, replace=replace, p=probs)
+
+
+def aggregate_mean(updates: List) -> object:
+    """w^t = (1/K) sum_k w_k^t  (unweighted mean over the selected set,
+    exactly as in Alg. 1 line 7 / Alg. 2 line 9)."""
+    return pt.mean(updates)
+
+
+def aggregate_weighted(updates: List, weights: Sequence[float]) -> object:
+    """n_k-weighted aggregation (FedAvg as implemented in McMahan et al.)."""
+    return pt.weighted_mean(updates, list(weights))
+
+
+def aggregate_gradients(grads: List) -> object:
+    """g_t = (1/K) sum_{k in S_t} grad F_k(w^{t-1})  (Alg. 2 line 6)."""
+    return pt.mean(grads)

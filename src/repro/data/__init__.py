@@ -1,0 +1,12 @@
+"""Federated data pipeline."""
+from repro.data.batching import FederatedData, pad_to_batches
+from repro.data.leaf_like import (make_femnist_like, make_sent140_like,
+                                  make_shakespeare_like)
+from repro.data.synthetic import (generate_synthetic, make_synthetic,
+                                  paper_synthetic_suite)
+
+__all__ = [
+    "FederatedData", "pad_to_batches",
+    "make_synthetic", "generate_synthetic", "paper_synthetic_suite",
+    "make_femnist_like", "make_sent140_like", "make_shakespeare_like",
+]

@@ -1,0 +1,67 @@
+"""Federated dataset container: fixed-shape padded batch stacks per device.
+
+Each device's arrays are padded to a whole number of batches by *cycling*
+its own examples (so every batch is a valid sample of the device's local
+distribution), then reshaped to ``(num_batches, batch_size, ...)``.
+``num_batches`` is bucketed to the next power of two so the jitted local
+solver compiles O(log max_batches) times, not once per device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def pad_to_batches(arrays: Dict[str, np.ndarray], batch_size: int,
+                   bucket: bool = True) -> Dict[str, jnp.ndarray]:
+    n = next(iter(arrays.values())).shape[0]
+    nb = max(1, math.ceil(n / batch_size))
+    if bucket:
+        nb = _next_pow2(nb)
+    target = nb * batch_size
+    idx = np.arange(target) % n           # cycle the device's own examples
+    out = {}
+    for k, a in arrays.items():
+        padded = a[idx]
+        out[k] = jnp.asarray(
+            padded.reshape((nb, batch_size) + a.shape[1:]))
+    return out
+
+
+class FederatedData:
+    """The dataset protocol consumed by ``FederatedTrainer``."""
+
+    def __init__(self, device_data: List[Dict[str, np.ndarray]],
+                 batch_size: int, bucket: bool = True,
+                 eval_batch_limit: Optional[int] = None, name: str = ""):
+        self.name = name
+        self.batch_size = batch_size
+        self.num_devices = len(device_data)
+        self.sizes = [next(iter(d.values())).shape[0] for d in device_data]
+        total = sum(self.sizes)
+        self.weights = [s / total for s in self.sizes]   # p_k = n_k / n
+        self._batches = [pad_to_batches(d, batch_size, bucket)
+                         for d in device_data]
+        self._eval_limit = eval_batch_limit
+
+    def device_batches(self, k: int):
+        return self._batches[k]
+
+    def eval_batches(self) -> Iterable[Tuple[float, dict]]:
+        for k in range(self.num_devices):
+            b = self._batches[k]
+            if self._eval_limit is not None:
+                b = {key: v[: self._eval_limit] for key, v in b.items()}
+            yield self.weights[k], b
+
+    def stats(self) -> Dict[str, float]:
+        s = np.array(self.sizes)
+        return {"devices": self.num_devices, "samples": int(s.sum()),
+                "mean": float(s.mean()), "stdev": float(s.std())}

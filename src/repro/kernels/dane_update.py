@@ -1,0 +1,59 @@
+"""Fused FedDANE local-update Pallas TPU kernel.
+
+    w' = w - eta * (grad + (g_t - grad F_k(w0)) + mu * (w - w0))
+
+Four model-sized operand streams + one output stream -> arithmetic
+intensity ~= 6 flops / 10 bytes (bf16): strictly HBM-bandwidth-bound.
+The fusion wins by reading each operand exactly once instead of the 3-4
+round trips the unfused pytree expression costs, and the (rows, 128)
+blocking keeps each tile VMEM-resident and lane-aligned.
+
+eta/mu arrive as (1,1) SMEM scalars so one compiled kernel serves every
+round (mu is swept in the paper's tuning grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _kernel(eta_ref, mu_ref, w_ref, g_ref, c_ref, a_ref, out_ref):
+    eta = eta_ref[0, 0]
+    mu = mu_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    out = w - eta * (g + c + mu * (w - a))
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def dane_update_2d(w, grad, g_corr, anchor, eta, mu,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False):
+    """Core pallas_call on a (rows, LANES) view."""
+    rows = w.shape[0]
+    block_rows = min(block_rows, rows)
+    while rows % block_rows != 0:
+        block_rows //= 2
+    block = (block_rows, LANES)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec(block, lambda i: (i, 0))
+    scalar = pl.BlockSpec(memory_space=pltpu.SMEM)
+    eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scalar, scalar, spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(eta, mu, w, grad, g_corr, anchor)

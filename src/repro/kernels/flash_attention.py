@@ -1,0 +1,104 @@
+"""Flash-attention Pallas TPU kernel (blockwise online softmax).
+
+TPU adaptation of the paper-agnostic attention hot spot: HBM->VMEM tiles of
+(block_q, head_dim) queries iterate over (block_k, head_dim) KV tiles on the
+innermost (sequential) grid axis; the running max / normalizer / output
+accumulator live in VMEM scratch across that axis, and the MXU sees
+128-aligned (block_q x block_k) matmuls.  Causal blocks that are fully
+masked are skipped via ``pl.when`` (upper-triangle block skip).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, block_q: int, block_k: int, num_kv_blocks: int,
+            scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # skip KV blocks entirely above the causal diagonal
+    @pl.when((k_start <= q_start + block_q - 1) if causal else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = kpos <= qpos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_3d(q, k, v, *, causal: bool = True,
+                       block_q: int = DEFAULT_BLOCK_Q,
+                       block_k: int = DEFAULT_BLOCK_K,
+                       interpret: bool = False):
+    """q: (BH, S, hd); k, v: (BH, T, hd) -> (BH, S, hd)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, block_q=block_q, block_k=block_k,
+        num_kv_blocks=nk, scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

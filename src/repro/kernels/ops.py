@@ -1,0 +1,79 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``;
+on TPU they compile to Mosaic.  Wrappers handle pytree flattening
+(dane_update) and GQA head layout (flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dane_update import LANES, dane_update_2d
+from repro.kernels.flash_attention import flash_attention_3d
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# dane_update over arbitrary pytrees
+# ---------------------------------------------------------------------------
+
+def _pad_2d(a):
+    """Flatten to (rows, LANES) with zero pad; returns (view, orig_size)."""
+    flat = a.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dane_update_array(w, grad, g_corr, anchor, eta, mu,
+                      interpret: bool = True):
+    """Fused update for one array of any shape."""
+    w2, n = _pad_2d(w)
+    g2, _ = _pad_2d(grad)
+    c2, _ = _pad_2d(g_corr)
+    a2, _ = _pad_2d(anchor)
+    out = dane_update_2d(w2, g2, c2, a2, eta, mu, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(w.shape)
+
+
+def dane_update(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
+                interpret: bool | None = None):
+    """Apply the fused FedDANE step leaf-wise over parameter pytrees."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return jax.tree_util.tree_map(
+        lambda w, g, c, a: dane_update_array(w, g, c, a, eta, mu,
+                                             interpret=interpret),
+        w_tree, grad_tree, corr_tree, anchor_tree)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with GQA layout handling
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool = True):
+    """q: (B, S, H, hd); k, v: (B, T, Kv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    group = H // Kv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    to3 = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    o = flash_attention_3d(to3(q), to3(k), to3(v), causal=causal,
+                           interpret=interpret)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dane_update_ref(w, grad, g_corr, anchor, *, eta: float, mu: float):
+    """FedDANE local step (Alg. 2 line 7 subproblem, one SGD step):
+
+        w' = w - eta * (grad + g_corr + mu * (w - anchor))
+
+    where g_corr = g_t - grad F_k(w^{t-1}).  All four operands are
+    model-sized: at 235B/480B scale this elementwise combine is an
+    HBM-bandwidth-bound hot spot, hence the fused kernel.
+    """
+    f32 = jnp.float32
+    out = (w.astype(f32)
+           - eta * (grad.astype(f32) + g_corr.astype(f32)
+                    + mu * (w.astype(f32) - anchor.astype(f32))))
+    return out.astype(w.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Materialized-scores attention.  q,k,v: (B, H, S|T, hd)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scores = jnp.einsum("bhsk,bhtk->bhst",
+                        q.astype(jnp.float32) * hd ** -0.5,
+                        k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtk->bhsk", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Distributed runtime: mesh, sharding rules, lowerable steps, dry-run."""
+from repro.launch.mesh import (CHIPS_PER_POD, HBM_BW, ICI_BW,
+                               PEAK_FLOPS_BF16, make_host_mesh,
+                               make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW", "CHIPS_PER_POD"]

@@ -1,0 +1,83 @@
+"""Sharding policy: logical-axis rules per (mesh, input-shape kind).
+
+Baseline policy (recorded as such in EXPERIMENTS.md §Perf):
+- weights:  FSDP over the data axis (+ pod axis when present) on the
+  d_model/experts dims, Megatron TP over the model axis on d_ff/heads/vocab
+- train/prefill activations: batch over (pod, data)
+- decode KV caches: batch over (pod, data), cache seq over model; for
+  global_batch=1 (long_500k) the cache seq axis takes the whole mesh
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.param import ShardingRules
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (fsdp_axes, tensor_axis) for this mesh."""
+    names = mesh.axis_names
+    fsdp = ("pod", "data") if "pod" in names else ("data",)
+    return fsdp, "model"
+
+
+def weight_rules(mesh: Mesh, *, fsdp: bool = True,
+                 tensor_only_vocab: bool = True) -> ShardingRules:
+    fsdp_axes, tp = mesh_axes(mesh)
+    wfsdp = fsdp_axes if fsdp else None
+    return ShardingRules({
+        "d_model": wfsdp,
+        "d_ff": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": None,
+        "vocab": tp,
+        # experts align with the dispatched block's expert dim (tensor
+        # axis); d_model FSDP-shards them like every other weight
+        "experts": tp,
+        "ssm_inner": tp,
+        "ssm_state": None,
+        "layers": None,
+        "conv": None,
+    })
+
+
+def cache_rules(mesh: Mesh, shape: InputShape) -> ShardingRules:
+    fsdp_axes, tp = mesh_axes(mesh)
+    batch_axes: Tuple[str, ...] = fsdp_axes
+    data_size = 1
+    for a in fsdp_axes:
+        data_size *= mesh.shape[a]
+    if shape.global_batch < data_size:
+        # long_500k: batch unshardable -> spread cache seq over everything
+        return ShardingRules({
+            "batch": None, "seq": fsdp_axes + (tp,),
+            "kv_heads": None, "head_dim": None, "layers": None,
+            "ssm_inner": tp, "ssm_state": None, "d_model": None,
+            "conv": None,
+        })
+    return ShardingRules({
+        "batch": batch_axes, "seq": tp,
+        "kv_heads": None, "head_dim": None, "layers": None,
+        "ssm_inner": tp, "ssm_state": None, "d_model": None,
+        "conv": None,
+    })
+
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    fsdp_axes, _ = mesh_axes(mesh)
+    size = 1
+    for a in fsdp_axes:
+        size *= mesh.shape[a]
+    if global_batch % size == 0:
+        return P(fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0])
+    return P(None)
+
+
+def batch_sharding(mesh: Mesh, global_batch: int, ndim: int
+                   ) -> NamedSharding:
+    spec = batch_pspec(mesh, global_batch)
+    return NamedSharding(mesh, P(*(tuple(spec) + (None,) * (ndim - 1))))

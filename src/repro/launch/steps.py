@@ -1,0 +1,180 @@
+"""Lowerable step functions + their abstract input/state specs.
+
+These are the programs the multi-pod dry-run lowers and compiles for every
+(architecture x input shape):
+
+- train_4k    -> ``feddane_round_step``: one FedDANE round participation —
+  phase-A gradient at the server anchor (its batch-dim all-reduce is the
+  Alg. 2 line-6 aggregation), phase-B DANE-subproblem step from the current
+  params using the server gradient ``g_t`` carried in the train state, and
+  the updated-iterate all-reduce (line 9).  Carries the technique's two
+  extra model-sized state buffers (anchor, g_t).
+- prefill_32k -> ``prefill_step``: full-sequence forward (chunked attention).
+- decode_*    -> ``decode_one_step``: one token against the KV cache.
+
+Baselines/variants lowered for §Perf: ``fedavg_step`` (no correction, one
+fwd+bwd), ``feddane_pipelined_step`` (§V-C single-round stale-gradient
+variant — half the communication phases).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import pytree as pt
+from repro.models import transformer
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def train_state_specs(cfg: ModelConfig, algo: str = "feddane") -> dict:
+    """ParamSpec tree for the train state.  FedDANE carries anchor + g_t."""
+    p = transformer.model_specs(cfg)
+    if algo == "fedavg":
+        return {"params": p}
+    return {"params": p, "anchor": p, "g_t": p}
+
+
+def abstract_train_state(cfg: ModelConfig, algo: str = "feddane",
+                         dtype=jnp.bfloat16) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        train_state_specs(cfg, algo),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Abstract batches per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.encoder_decoder:
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.frontend == "patches":
+        P = cfg.num_prefix_embeddings
+        return {"tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+                "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), dtype),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape,
+                        dtype=jnp.bfloat16) -> Dict[str, Any]:
+    spec = train_batch_specs(cfg, shape, dtype)
+    del spec["labels"]
+    if cfg.encoder_decoder:
+        # encoder consumes seq_len frames; decoder scores one BOS token
+        spec["tokens"] = jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                              jnp.int32)
+    return spec
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape
+                       ) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "t": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: InputShape,
+                          dtype=jnp.bfloat16) -> dict:
+    cache_len = transformer.effective_cache_len(cfg, shape.seq_len)
+    enc_len = shape.seq_len if cfg.encoder_decoder else 0
+    specs = transformer.decode_cache_specs(cfg, shape.global_batch,
+                                           cache_len, enc_len)
+
+    def to_sds(s: ParamSpec):
+        # KV caches use the activation dtype; recurrent states stay f32
+        dt = dtype if "seq" in s.axes else jnp.float32
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree_util.tree_map(
+        to_sds, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_feddane_round_step(cfg: ModelConfig, *, eta: float = 1e-3,
+                            mu: float = 0.01, remat: str = "full"
+                            ) -> Callable:
+    """One FedDANE round participation (see module docstring)."""
+
+    def step(state, batch):
+        lf = lambda p: transformer.loss_fn(p, batch, cfg, remat=remat)
+        # Phase A (Alg. 2 lines 5-6): gradient at the server anchor point.
+        g_anchor = jax.grad(lf)(state["anchor"])
+        # Gradient-correction term: server g_t vs this client's anchor grad.
+        corr = pt.sub(state["g_t"], g_anchor)
+        # Phase B (line 7): inexact DANE subproblem — one SGD step on
+        #   F_k(w) + <corr, w - anchor> + mu/2 ||w - anchor||^2
+        loss, g = jax.value_and_grad(lf)(state["params"])
+        dane_grad = pt.add(pt.add(g, corr),
+                           pt.scale(pt.sub(state["params"], state["anchor"]),
+                                    mu))
+        new_params = pt.sub(state["params"], pt.scale(dane_grad, eta))
+        new_state = {"params": new_params, "anchor": new_params,
+                     "g_t": g_anchor}
+        return new_state, {"loss": loss}
+
+    return step
+
+
+def make_fedavg_step(cfg: ModelConfig, *, eta: float = 1e-3,
+                     remat: str = "full") -> Callable:
+    def step(state, batch):
+        lf = lambda p: transformer.loss_fn(p, batch, cfg, remat=remat)
+        loss, g = jax.value_and_grad(lf)(state["params"])
+        return ({"params": pt.sub(state["params"], pt.scale(g, eta))},
+                {"loss": loss})
+    return step
+
+
+def make_feddane_pipelined_step(cfg: ModelConfig, *, eta: float = 1e-3,
+                                mu: float = 0.01, remat: str = "full"
+                                ) -> Callable:
+    """§V-C variant: stale gradient correction, ONE fwd+bwd per round."""
+    def step(state, batch):
+        lf = lambda p: transformer.loss_fn(p, batch, cfg, remat=remat)
+        loss, g = jax.value_and_grad(lf)(state["params"])
+        corr = pt.sub(state["g_t"], g)        # stale server g_t vs current
+        dane_grad = pt.add(pt.add(g, corr),
+                           pt.scale(pt.sub(state["params"], state["anchor"]),
+                                    mu))
+        new_params = pt.sub(state["params"], pt.scale(dane_grad, eta))
+        return ({"params": new_params, "anchor": new_params, "g_t": g},
+                {"loss": loss})
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch):
+        return transformer.prefill(params, batch, cfg)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch, cache):
+        return transformer.decode_step(params, batch, cache, cfg)
+    return step
+
+
+STEP_BUILDERS = {
+    "feddane": make_feddane_round_step,
+    "fedavg": make_fedavg_step,
+    "feddane_pipelined": make_feddane_pipelined_step,
+}

@@ -1,0 +1,14 @@
+"""Model zoo: assigned architectures + the paper's experiment models."""
+from repro.models.param import (ParamSpec, ShardingRules, abstract_params,
+                                default_rules, init_params, param_count,
+                                param_pspecs, param_shardings)
+from repro.models.transformer import (decode_cache_specs, decode_step,
+                                      effective_cache_len, forward_hidden,
+                                      loss_fn, model_specs, prefill)
+
+__all__ = [
+    "ParamSpec", "ShardingRules", "abstract_params", "default_rules",
+    "init_params", "param_count", "param_pspecs", "param_shardings",
+    "model_specs", "loss_fn", "prefill", "decode_step",
+    "decode_cache_specs", "effective_cache_len", "forward_hidden",
+]

@@ -1,0 +1,276 @@
+"""GQA attention with RoPE: full, chunked (flash-style in XLA), and cached.
+
+Three execution paths:
+
+- ``full_attention``     — materialized scores; used for seq <= CHUNK_THRESHOLD.
+- ``chunked_attention``  — lax.scan over KV chunks with an online softmax
+  (the flash-attention recurrence expressed in XLA); bounded memory for
+  32k-token prefill.  A Pallas VMEM-tiled version of the same recurrence
+  lives in ``repro/kernels/flash_attention.py`` (validated against the same
+  oracle); the XLA form is used inside pjit programs so SPMD partitioning
+  and ``cost_analysis`` FLOP accounting stay exact.
+- ``cached_attention``   — one-token decode against a (possibly seq-sharded)
+  KV cache, with optional sliding window.
+
+GQA is computed via head-group einsums (no materialized KV repetition).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+from repro.models.shardutil import constrain, tag_size
+
+CHUNK_THRESHOLD = 4096
+KV_CHUNK = 512
+NEG_INF = -1e30
+
+
+def _score_tags(kv: int, g: int, sq: int):
+    """Scores/accumulators are (B, G, Kv, Sq, T).  Pick one shardable dim
+    for the TP axis, in preference order: kv heads (MHA-ish), query groups
+    (GQA with many groups, e.g. 64H/4Kv), then query sequence (context-
+    parallel attention — covers 56H/24H/48H archs whose head counts don't
+    divide the TP degree)."""
+    tp = max(1, tag_size("tp"))
+    if kv % tp == 0:
+        return ("batch", None, "tp", None, None)
+    if g % tp == 0:
+        return ("batch", "tp", None, None, None)
+    if sq % tp == 0:
+        return ("batch", None, None, "tp", None)
+    return ("batch", None, None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    angles = angles[..., None, :]                           # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def attention_specs(d_model: int, num_heads: int, num_kv_heads: int,
+                    head_dim: int, qkv_bias: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d_model, num_heads, head_dim),
+                        ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec((d_model, num_kv_heads, head_dim),
+                        ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_model, num_kv_heads, head_dim),
+                        ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamSpec((num_heads, head_dim, d_model),
+                        ("heads", "head_dim", "d_model")),
+    }
+    if qkv_bias:
+        s["bq"] = ParamSpec((num_heads, head_dim), ("heads", "head_dim"),
+                            init="zeros")
+        s["bk"] = ParamSpec((num_kv_heads, head_dim),
+                            ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((num_kv_heads, head_dim),
+                            ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def qkv_project(params, x, positions, theta: float):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    # head-sharding when divisible; else context-parallel (seq over TP)
+    H, Kv, S = q.shape[2], k.shape[2], q.shape[1]
+    tp = max(1, tag_size("tp"))
+    if H % tp == 0:
+        q = constrain(q, "batch", None, "tp", None)
+    elif S % tp == 0:
+        q = constrain(q, "batch", "tp", None, None)
+    if Kv % tp == 0:
+        k = constrain(k, "batch", None, "tp", None)
+        v = constrain(v, "batch", None, "tp", None)
+    return q, k, v
+
+
+def out_project(params, o):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def _maybe_repeat_kv(q, k, v):
+    """Megatron-style GQA-TP fallback (§Perf H7): when neither Kv nor the
+    query-group count divides the TP degree but H does (yi/minitron/jamba:
+    32H/4-8Kv vs TP=16), replicate KV heads so the flat head dim shards
+    fully — removes the SPMD 'involuntary full rematerialization' on the
+    seq-sharded path's backward transposes.  With h = g*Kv + n grouping,
+    head h reads kv head h % Kv, which is exactly jnp.tile."""
+    H, Kv = q.shape[2], k.shape[2]
+    tp = max(1, tag_size("tp"))
+    if tp > 1 and Kv % tp and (H // Kv) % tp and H % tp == 0:
+        reps = H // Kv
+        k = constrain(jnp.tile(k, (1, 1, reps, 1)), "batch", None, "tp",
+                      None)
+        v = constrain(jnp.tile(v, (1, 1, reps, 1)), "batch", None, "tp",
+                      None)
+    return k, v
+
+
+def _group(q, num_kv_heads: int):
+    """(B,S,H,hd) -> (B,S,G,Kv,hd) with h = g*Kv + n.
+
+    (G, Kv) ordering keeps the reshape compatible with a TP-sharded flat
+    head dim (consecutive head blocks live on one shard), so SPMD never
+    has to reshard the grouped tensor.
+    """
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, H // num_kv_heads, num_kv_heads, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full attention (short sequences)
+# ---------------------------------------------------------------------------
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_offset: int = 0):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,Kv,hd).  Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    k, v = _maybe_repeat_kv(q, k, v)
+    Kv = k.shape[2]
+    qg = _group(q, Kv)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bsgnk,btnk->bgnst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = constrain(scores, *_score_tags(Kv, H // Kv, Sq))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgnst,btnk->bsgnk", probs.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention: online-softmax scan over KV chunks
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      kv_chunk: int = KV_CHUNK):
+    """Flash-attention recurrence over KV chunks; O(Sq * chunk) memory."""
+    B, Sq, H, hd = q.shape
+    k, v = _maybe_repeat_kv(q, k, v)
+    Skv, Kv = k.shape[1], k.shape[2]
+    if Skv % kv_chunk != 0:
+        return full_attention(q, k, v, causal=causal, window=window)
+    n = Skv // kv_chunk
+    qg = (_group(q, Kv) * hd ** -0.5).astype(jnp.float32)
+    kc = k.reshape(B, n, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, kv_chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq)
+
+    G = H // Kv
+    t5 = _score_tags(Kv, G, Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, idx = xs
+        kpos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bsgnk,btnk->bgnst", qg, kb.astype(jnp.float32))
+        s = constrain(s, *t5)
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # fully-masked chunks: keep p exactly 0 (avoid exp(-inf - -inf) = 1)
+        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgnst,btnk->bgnsk", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (constrain(jnp.full((B, G, Kv, Sq), NEG_INF, jnp.float32),
+                      *t5[:4]),
+            constrain(jnp.zeros((B, G, Kv, Sq), jnp.float32), *t5[:4]),
+            constrain(jnp.zeros((B, G, Kv, Sq, hd), jnp.float32), *t5))
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (kc, vc, jnp.arange(n)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return o.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0):
+    S = q.shape[1]
+    if S >= CHUNK_THRESHOLD:
+        # larger chunks at moderate S: fewer scan carries to stack for BPTT
+        chunk = max(KV_CHUNK, min(1024, S // 4))
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 kv_chunk=chunk)
+    return full_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against a KV cache
+# ---------------------------------------------------------------------------
+
+def cached_attention(q, k_cache, v_cache, *, cache_len):
+    """q: (B,1,H,hd); caches: (B,S,Kv,hd); cache_len: () or (B,) valid len.
+
+    The cache seq axis may be sharded over the mesh; the softmax reductions
+    below partition cleanly (XLA inserts the m/l all-reduces).
+    """
+    B, _, H, hd = q.shape
+    Kv = k_cache.shape[2]
+    qg = _group(q, Kv).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bsgnk,btnk->bgnst", qg, k_cache.astype(jnp.float32))
+    s = constrain(s, "batch", None, None, None, None)
+    kpos = jnp.arange(k_cache.shape[1])
+    valid = kpos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgnst,btnk->bsgnk", probs,
+                   v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, position):
+    """Insert one token at ``position`` (scalar) into ring/linear cache."""
+    S = k_cache.shape[1]
+    pos = jnp.asarray(position) % S
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache

@@ -1,0 +1,140 @@
+"""Shared layers: RMSNorm, SwiGLU FFN, embeddings, chunked cross-entropy.
+
+All layers are pure functions over ``(params_dict, inputs)`` where
+``params_dict`` leaves are jnp arrays (or ShapeDtypeStructs during lowering).
+Spec builders return the matching ParamSpec trees.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+from repro.models.shardutil import constrain
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def norm_spec(d_model: int) -> ParamSpec:
+    return ParamSpec((d_model,), ("d_model",), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_ffn_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("d_model", "d_ff")),
+        "w_up": ParamSpec((d_model, d_ff), ("d_model", "d_ff")),
+        "w_down": ParamSpec((d_ff, d_model), ("d_ff", "d_model")),
+    }
+
+
+def swiglu_ffn(params, x):
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("tp",)))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# GELU MLP (whisper-style enc-dec FFN)
+# ---------------------------------------------------------------------------
+
+def gelu_mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_in": ParamSpec((d_model, d_ff), ("d_model", "d_ff")),
+        "b_in": ParamSpec((d_ff,), ("d_ff",), init="zeros"),
+        "w_out": ParamSpec((d_ff, d_model), ("d_ff", "d_model")),
+        "b_out": ParamSpec((d_model,), ("d_model",), init="zeros"),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int) -> dict:
+    return {"embedding": ParamSpec((vocab, d_model), ("vocab", "d_model"),
+                                   init="embed")}
+
+
+def embed(params, token_ids):
+    return jnp.take(params["embedding"], token_ids, axis=0)
+
+
+def unembed(params, x):
+    """Logits from hidden states (tied or untied embedding matrix)."""
+    return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+def head_specs(d_model: int, vocab: int) -> dict:
+    return {"w": ParamSpec((d_model, vocab), ("d_model", "vocab"))}
+
+
+def head(params, x):
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy, chunked over sequence so full logits are never resident.
+# ---------------------------------------------------------------------------
+
+def _xent_chunk(hidden, w_or_emb, labels, transpose: bool):
+    if transpose:   # tied embedding (V, d)
+        logits = jnp.einsum("bsd,vd->bsv", hidden, w_or_emb)
+    else:           # head weight (d, V)
+        logits = jnp.einsum("bsd,dv->bsv", hidden, w_or_emb)
+    logits = constrain(logits, "batch", None, "tp")
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((logz - gold) * mask).sum(), mask.sum()
+
+
+def chunked_softmax_xent(hidden, w_or_emb, labels, *, transpose: bool,
+                         chunk: int = 512):
+    """Mean token cross-entropy with seq-chunked logit materialization.
+
+    ``hidden``: (B, S, d); ``labels``: (B, S) with -1 = ignore.
+    The chunk body is rematerialized so the backward pass never keeps more
+    than one (B, chunk, V) logits block resident.
+    """
+    B, S, _ = hidden.shape
+    if S % chunk != 0 or S <= chunk:
+        loss, denom = _xent_chunk(hidden, w_or_emb, labels, transpose)
+        return loss / jnp.maximum(denom, 1.0)
+
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, -1).swapaxes(0, 1)      # (n,B,c,d)
+    y = labels.reshape(B, n, chunk).swapaxes(0, 1)          # (n,B,c)
+
+    body = jax.checkpoint(
+        lambda carry, xs: (
+            (carry[0] + (r := _xent_chunk(xs[0], w_or_emb, xs[1],
+                                          transpose))[0],
+             carry[1] + r[1]),
+            None,
+        ))
+    from repro.models import transformer as _tf
+    (loss, denom), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                    (h, y), unroll=_tf._unroll())
+    return loss / jnp.maximum(denom, 1.0)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+TPU-native formulation (no global sort): slot positions are computed with an
+exclusive cumsum over a (tokens*k, E) one-hot, then tokens are gather-
+dispatched into a dense (E, C, d) block that feeds MXU-aligned expert
+einsums, and scatter-combined back with router weights.  Experts are sharded
+over the FSDP axis and per-expert d_ff over the tensor axis, so the dispatch
+gather lowers to the expert-parallel all-to-all / all-gather pattern.
+
+Supports Arctic-style parallel dense-FFN residual branch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import swiglu_ffn, swiglu_ffn_specs
+from repro.models.param import ParamSpec
+from repro.models.shardutil import constrain
+
+
+def moe_specs(d_model: int, d_ff: int, cfg: MoEConfig) -> dict:
+    # experts shard over the TENSOR axis (aligning with the dispatched
+    # block's expert dim -> expert FFN einsums are fully local); d_model
+    # shards over the FSDP axes (gathered per layer like dense weights).
+    s = {
+        "router": ParamSpec((d_model, cfg.num_experts),
+                            ("d_model", None), scale=0.02),
+        "w_gate": ParamSpec((cfg.num_experts, d_model, d_ff),
+                            ("experts", "d_model", None)),
+        "w_up": ParamSpec((cfg.num_experts, d_model, d_ff),
+                          ("experts", "d_model", None)),
+        "w_down": ParamSpec((cfg.num_experts, d_ff, d_model),
+                            ("experts", None, "d_model")),
+    }
+    if cfg.dense_residual:
+        s["dense"] = swiglu_ffn_specs(
+            d_model, cfg.dense_residual_d_ff or d_ff)
+    return s
+
+
+def _capacity(num_tokens: int, cfg: MoEConfig,
+              capacity_factor: float = 1.25) -> int:
+    c = math.ceil(num_tokens * cfg.top_k / cfg.num_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def group_capacity(seq_len: int, cfg: MoEConfig,
+                   capacity_factor: float = 1.25) -> int:
+    """Per-group (= per-sequence) expert capacity (Switch-style)."""
+    return _capacity(seq_len, cfg, capacity_factor)
+
+
+def moe_ffn(params, x, cfg: MoEConfig,
+            capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss ()).
+
+    GROUP-LOCAL capacity dispatch (TPU-native formulation):
+
+    Each sequence is a routing group with per-group expert capacity Cb
+    (Switch-style).  Slot positions come from a cumsum *inside* the group
+    — no cross-device prefix sums — and dispatch/combine are batched
+    per-group gathers, so every intermediate keeps the batch dim sharded
+    over the FSDP axes and the expert dim sharded over the tensor axis.
+    Expert weights shard (experts -> tensor, d_model -> FSDP), making the
+    expert einsums fully local; the only communication is the per-layer
+    FSDP weight all-gather, identical in kind to the dense layers.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    SK = S * K
+    Cb = group_capacity(S, cfg, capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]) \
+        .astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B, S, E)
+    gate, idx = jax.lax.top_k(probs, K)                         # (B, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                # (E,)
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32)             # (B,S,K,E)
+    ce = sel.mean(axis=(0, 1, 2))
+    aux = cfg.aux_loss_weight * E * jnp.sum(me * ce)
+
+    # --- group-local slotting ---------------------------------------------
+    ge = idx.reshape(B, SK)                                     # expert ids
+    onehot = jax.nn.one_hot(ge, E, dtype=jnp.int32)             # (B, SK, E)
+    onehot = constrain(onehot, "batch", None, None)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - onehot,
+                              ge[..., None], axis=2)[..., 0]    # (B, SK)
+    keep = pos < Cb
+    slot = jnp.where(keep, ge * Cb + pos, E * Cb)               # drop -> pad
+
+    # token position within the group for each (token, choice)
+    s_idx = (jnp.arange(S)[None, :, None]
+             + jnp.zeros((1, 1, K), jnp.int32)).reshape(1, SK)
+    disp = jnp.full((B, E * Cb + 1), S, dtype=jnp.int32)
+    disp = disp.at[jnp.arange(B)[:, None], slot].set(
+        jnp.broadcast_to(s_idx, (B, SK)))[:, : E * Cb]          # (B, E*Cb)
+
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(xpad, disp[..., None], axis=1)     # (B,E*Cb,d)
+    xe = xe.reshape(B, E, Cb, d)
+    xe = constrain(xe, "batch", "tp", None, None)
+
+    g = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "tp", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    ye = constrain(ye, "batch", "tp", None, None)               # (B,E,Cb,d)
+
+    # --- combine: K small per-group gathers, no (B,SK,d) materialization --
+    ypad = jnp.concatenate(
+        [ye.reshape(B, E * Cb, d),
+         jnp.zeros((B, 1, d), ye.dtype)], axis=1)               # (B,E*Cb+1,d)
+    slot3 = slot.reshape(B, S, K)
+    out = jnp.zeros((B, S, d), jnp.float32)
+    for j in range(K):
+        yj = jnp.take_along_axis(ypad, slot3[:, :, j][..., None], axis=1)
+        out = out + yj.astype(jnp.float32) \
+            * gate[:, :, j][..., None].astype(jnp.float32)
+
+    if cfg.dense_residual:
+        out = out + swiglu_ffn(params["dense"], x).astype(jnp.float32)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,166 @@
+"""Parameter-spec system.
+
+A model is described by a pytree (nested dicts) of :class:`ParamSpec`, each
+carrying a shape, *logical axis names*, and an initializer.  From one spec
+tree we derive, without ever allocating full-size tensors:
+
+- ``init_params``      -> real parameters (smoke tests, paper experiments)
+- ``abstract_params``  -> ShapeDtypeStructs (multi-pod dry-run)
+- ``param_shardings``  -> NamedShardings via logical->mesh rules
+
+Logical axis names used across the zoo:
+  layers, d_model, d_ff, heads, kv_heads, head_dim, vocab, experts,
+  ssm_inner, ssm_state, conv, batch, seq  (None = never sharded)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Optional[str]
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Axis, ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float = 0.0           # 0 -> fan-in default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def _init_one(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * 0.02).astype(dtype)
+    # fan-in scaled normal
+    fan_in = 1
+    for s, a in zip(spec.shape, spec.axes):
+        if a not in ("layers", "experts") and s > 1:
+            fan_in *= s
+    # output dim is the last axis by convention; remove it from fan-in
+    if len(spec.shape) >= 2:
+        fan_in //= max(1, spec.shape[-1])
+    scale = spec.scale or 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def init_params(spec_tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, dtype=jnp.bfloat16):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Logical -> mesh sharding rules
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axes.
+
+    ``fsdp_axes`` shards the weight-stationary dim (d_model on 2D weights,
+    experts on MoE stacks); ``tensor_axes`` is the Megatron-style TP axis.
+    """
+    mapping: Mapping[str, MeshAxes] = field(default_factory=dict)
+
+    def get(self, axis: Axis) -> MeshAxes:
+        if axis is None:
+            return None
+        return self.mapping.get(axis)
+
+
+def default_rules(*, fsdp: MeshAxes = "data",
+                  tensor: MeshAxes = "model") -> ShardingRules:
+    return ShardingRules({
+        "d_model": fsdp,
+        "d_ff": tensor,
+        "heads": tensor,
+        "kv_heads": tensor,
+        "head_dim": None,
+        "vocab": tensor,
+        "experts": tensor,
+        "ssm_inner": tensor,
+        "ssm_state": None,
+        "layers": None,
+        "conv": None,
+    })
+
+
+def _axis_size(mesh: Mesh, mesh_axes: MeshAxes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    n = 1
+    for a in mesh_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_pspec(spec: ParamSpec, rules: ShardingRules,
+               mesh: Mesh) -> P:
+    """PartitionSpec for one param: resolve conflicts + divisibility."""
+    used: set = set()
+    out = []
+    for size, axis in zip(spec.shape, spec.axes):
+        ma = rules.get(axis)
+        if ma is None:
+            out.append(None)
+            continue
+        names = (ma,) if isinstance(ma, str) else tuple(ma)
+        names = tuple(n for n in names if n not in used)
+        if not names or size % _axis_size(mesh, names) != 0:
+            # trim to the prefix that divides
+            good: Tuple[str, ...] = ()
+            for i in range(len(names), 0, -1):
+                cand = names[:i]
+                if size % _axis_size(mesh, cand) == 0:
+                    good = cand
+                    break
+            names = good
+        if not names:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    return P(*out)
+
+
+def param_pspecs(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return tree_map_specs(lambda s: spec_pspec(s, rules, mesh), spec_tree)
+
+
+def param_shardings(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_pspec(s, rules, mesh)), spec_tree)

@@ -1,0 +1,96 @@
+"""Best-effort activation sharding constraints.
+
+SPMD sharding propagation does not reliably keep the batch dimension of
+intermediate activations sharded through remat + scan + reshape chains (we
+observed batch-replicated attention scores, a 16x memory blowup).  These
+helpers pin the canonical layout — batch over the FSDP axes, heads/ffn over
+the tensor axis — wherever it matters, and degrade to identity when no mesh
+is active (single-device CPU tests) or when a dim is not divisible.
+
+Logical dim tags: "batch" -> ("pod","data") as available; "tp" -> "model";
+None -> unconstrained.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return None
+    return mesh
+
+
+def _resolve(tag: Optional[str], size: int, mesh) -> object:
+    if tag is None:
+        return None
+    if tag == "tp":
+        names: Tuple[str, ...] = ("model",)
+    elif tag == "batch":
+        names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    elif tag == "all":
+        names = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+    else:
+        names = (tag,)
+    names = tuple(n for n in names if n in mesh.axis_names)
+    # trim to the divisible prefix
+    for i in range(len(names), 0, -1):
+        prod = 1
+        for n in names[:i]:
+            prod *= mesh.shape[n]
+        if size % prod == 0:
+            picked = names[:i]
+            return picked[0] if len(picked) == 1 else picked
+    return None
+
+
+def tag_size(tag: str) -> int:
+    """Product of mesh-axis sizes a tag maps to (1 when off-mesh)."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return 1
+    if tag == "tp":
+        names = ("model",)
+    elif tag == "batch":
+        names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    elif tag == "all":
+        names = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+    else:
+        names = (tag,)
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *tags):
+    """constrain(x, "batch", None, "tp", None) etc.  Identity off-mesh."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    assert len(tags) == x.ndim, (tags, x.shape)
+    spec = [_resolve(t, s, mesh) for t, s in zip(tags, x.shape)]
+    # one mesh axis may appear only once
+    seen = set()
+    clean = []
+    for s in spec:
+        names = (s,) if isinstance(s, str) else (s or ())
+        if any(n in seen for n in names):
+            clean.append(None)
+            continue
+        seen.update(names)
+        clean.append(s)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x

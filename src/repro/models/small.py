@@ -1,0 +1,141 @@
+"""Small models used by the paper's own experiments (§V).
+
+- multinomial logistic regression (synthetic(α,β), FEMNIST — convex case)
+- stacked-LSTM character model (Shakespeare — non-convex case)
+- LSTM binary sentiment classifier (Sent140 — non-convex case)
+
+All are ``(specs(), loss_fn(params, batch), predict(params, batch))``
+triples over ParamSpec trees, so the federated core treats them exactly
+like the large architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Multinomial logistic regression
+# ---------------------------------------------------------------------------
+
+def logreg_specs(num_features: int, num_classes: int) -> dict:
+    return {
+        "w": ParamSpec((num_features, num_classes), ("d_model", None),
+                       init="zeros"),
+        "b": ParamSpec((num_classes,), (None,), init="zeros"),
+    }
+
+
+def logreg_logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params, batch) -> jnp.ndarray:
+    logits = logreg_logits(params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=1)[:, 0]
+    return nll.mean()
+
+
+def logreg_accuracy(params, batch) -> jnp.ndarray:
+    pred = jnp.argmax(logreg_logits(params, batch["x"]), axis=-1)
+    return (pred == batch["y"]).mean()
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell + stacked models
+# ---------------------------------------------------------------------------
+
+def lstm_cell_specs(d_in: int, d_hidden: int) -> dict:
+    return {
+        "wx": ParamSpec((d_in, 4 * d_hidden), ("d_model", None)),
+        "wh": ParamSpec((d_hidden, 4 * d_hidden), (None, None)),
+        "b": ParamSpec((4 * d_hidden,), (None,), init="zeros"),
+    }
+
+
+def lstm_cell(params, carry, x_t):
+    h, c = carry
+    gates = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_run(params, xs):
+    """xs: (B, S, d_in) -> (B, S, d_hidden)."""
+    B = xs.shape[0]
+    dh = params["wh"].shape[0]
+    init = (jnp.zeros((B, dh), xs.dtype), jnp.zeros((B, dh), xs.dtype))
+    _, hs = jax.lax.scan(lambda c, x: lstm_cell(params, c, x),
+                         init, xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+def charlstm_specs(vocab: int, embed_dim: int = 8,
+                   hidden: int = 256) -> dict:
+    """Paper's Shakespeare model: 2-layer LSTM, 256 hidden, 8-dim embed."""
+    return {
+        "embed": ParamSpec((vocab, embed_dim), ("vocab", None),
+                           init="embed"),
+        "lstm1": lstm_cell_specs(embed_dim, hidden),
+        "lstm2": lstm_cell_specs(hidden, hidden),
+        "head_w": ParamSpec((hidden, vocab), (None, "vocab")),
+        "head_b": ParamSpec((vocab,), ("vocab",), init="zeros"),
+    }
+
+
+def charlstm_logits(params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    h = lstm_run(params["lstm1"], x)
+    h = lstm_run(params["lstm2"], h)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def charlstm_loss(params, batch) -> jnp.ndarray:
+    """Next-char prediction: batch = {tokens (B,S), labels (B,S)}."""
+    logits = charlstm_logits(params, batch["tokens"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    return nll.mean()
+
+
+def charlstm_accuracy(params, batch) -> jnp.ndarray:
+    pred = jnp.argmax(charlstm_logits(params, batch["tokens"]), axis=-1)
+    return (pred == batch["labels"]).mean()
+
+
+def sentlstm_specs(vocab: int, embed_dim: int = 25,
+                   hidden: int = 100, num_classes: int = 2) -> dict:
+    """Paper's Sent140 model: embedding + LSTM + dense binary classifier."""
+    return {
+        "embed": ParamSpec((vocab, embed_dim), ("vocab", None),
+                           init="embed"),
+        "lstm1": lstm_cell_specs(embed_dim, hidden),
+        "head_w": ParamSpec((hidden, num_classes), (None, None)),
+        "head_b": ParamSpec((num_classes,), (None,), init="zeros"),
+    }
+
+
+def sentlstm_logits(params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    h = lstm_run(params["lstm1"], x)
+    return h[:, -1] @ params["head_w"] + params["head_b"]
+
+
+def sentlstm_loss(params, batch) -> jnp.ndarray:
+    logits = sentlstm_logits(params, batch["tokens"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=1)[:, 0]
+    return nll.mean()
+
+
+def sentlstm_accuracy(params, batch) -> jnp.ndarray:
+    pred = jnp.argmax(sentlstm_logits(params, batch["tokens"]), axis=-1)
+    return (pred == batch["y"]).mean()

@@ -1,0 +1,143 @@
+"""Mamba SSM mixer (Jamba's recurrent block) + shared chunked-scan helper.
+
+The selective-scan recurrence ``h_t = exp(dt_t * A) * h_{t-1} + (dt_t B_t) x_t``
+is evaluated with a two-level scan: an outer ``lax.scan`` over sequence
+chunks whose body is rematerialized (``jax.checkpoint``), and an inner scan
+over timesteps.  BPTT therefore stores only chunk-boundary carries, which is
+what makes 4k-token training of the hybrid archs fit in HBM.
+
+Decode is the same step function applied once — O(1) state, which is why the
+SSM/hybrid archs run the long_500k shape natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+SCAN_CHUNK = 64
+
+
+def chunked_scan(step: Callable, carry, xs, chunk: int = SCAN_CHUNK):
+    """scan ``step`` over the leading axis of ``xs`` with chunked remat."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S <= chunk or S % chunk != 0:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def outer(c, x_chunk):
+        return jax.lax.scan(step, c, x_chunk)
+
+    carry, ys_c = jax.lax.scan(jax.checkpoint(outer), carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.ssm_state_dim
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d_inner, dt_rank, N = mamba_dims(cfg)
+    d = cfg.d_model
+    return {
+        "w_in": ParamSpec((d, 2 * d_inner), ("d_model", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv_dim, d_inner),
+                            ("conv", "ssm_inner"), scale=0.1),
+        "conv_b": ParamSpec((d_inner,), ("ssm_inner",), init="zeros"),
+        "w_x": ParamSpec((d_inner, dt_rank + 2 * N), ("ssm_inner", None)),
+        "w_dt": ParamSpec((dt_rank, d_inner), (None, "ssm_inner")),
+        "b_dt": ParamSpec((d_inner,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((d_inner, N), ("ssm_inner", "ssm_state"),
+                           init="zeros"),
+        "d_skip": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_inner, d), ("ssm_inner", "d_model")),
+    }
+
+
+def _mamba_inputs(params, x, cfg: ModelConfig, conv_state=None):
+    """Shared projections.  x: (B, S, d) -> per-step scan inputs."""
+    d_inner, dt_rank, N = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di) each
+
+    # depthwise causal conv over seq, kernel ssm_conv_dim
+    Kc = cfg.ssm_conv_dim
+    state_dtype = xs.dtype if conv_state is None else conv_state.dtype
+    if conv_state is None:
+        pad = jnp.zeros(xs.shape[:1] + (Kc - 1,) + xs.shape[2:], xs.dtype)
+    else:
+        pad = conv_state.astype(xs.dtype)                   # (B, Kc-1, di)
+    xpad = jnp.concatenate([pad, xs], axis=1)
+    conv = sum(xpad[:, j: j + xs.shape[1]] * params["conv_w"][j]
+               for j in range(Kc))
+    new_conv_state = xpad[:, xpad.shape[1] - (Kc - 1):].astype(state_dtype)
+    xs = jax.nn.silu(conv + params["conv_b"])
+
+    proj = jnp.einsum("bsi,ir->bsr", xs, params["w_x"])
+    dt_low, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, params["w_dt"]) + params["b_dt"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))       # (di, N), < 0
+    return xs, z, dt, Bc, Cc, A, new_conv_state
+
+
+def _mamba_step(A):
+    def step(h, xs_t):
+        x_t, dt_t, b_t, c_t = xs_t                          # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)   # (B,di,N)
+        dbx = (dt_t * x_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]               # (B,di,N)
+        h = da * h + dbx
+        y = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+        return h, y
+    return step
+
+
+def mamba_mixer(params, x, cfg: ModelConfig, chunk: int = SCAN_CHUNK):
+    """Training/prefill forward.  x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    d_inner, _, N = mamba_dims(cfg)
+    xs, z, dt, Bc, Cc, A, _ = _mamba_inputs(params, x, cfg)
+    h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    swap = lambda a: a.swapaxes(0, 1)                       # (S,B,...)
+    _, ys = chunked_scan(_mamba_step(A), h0,
+                         (swap(xs), swap(dt), swap(Bc), swap(Cc)), chunk)
+    y = ys.swapaxes(0, 1).astype(x.dtype)                   # (B,S,di)
+    y = y + xs * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, params["w_out"])
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, _, N = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_inner, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params, x, state, cfg: ModelConfig):
+    """x: (B,1,d); state: {h, conv} -> (y (B,1,d), new state)."""
+    xs, z, dt, Bc, Cc, A, conv_state = _mamba_inputs(
+        params, x, cfg, conv_state=state["conv"])
+    h, y = _mamba_step(A)(state["h"],
+                          (xs[:, 0], dt[:, 0], Bc[:, 0], Cc[:, 0]))
+    y = y[:, None].astype(x.dtype) + xs * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    return out, {"h": h, "conv": conv_state}

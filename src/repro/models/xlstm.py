@@ -1,0 +1,203 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with recurrent gate connections), both with exponential
+gating and the paper's max-based stabilizer state.
+
+Like the Mamba mixer these are O(1)-state recurrences: chunked-remat scan
+for train/prefill, single-step for decode (hence long_500k-capable).
+
+Simplifications vs the reference implementation (noted in DESIGN.md):
+no pre-QK causal conv in mLSTM; sLSTM head-block-diagonal recurrent
+matrices are implemented as per-head dense einsums (equivalent structure).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.models.shardutil import constrain
+from repro.models.ssm import SCAN_CHUNK, chunked_scan
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    return d_inner, d_inner // cfg.num_heads
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    d_inner, _ = mlstm_dims(cfg)
+    return {
+        "w_up": ParamSpec((d, 2 * d_inner), ("d_model", "ssm_inner")),
+        "w_q": ParamSpec((d_inner, d_inner), ("ssm_inner", None)),
+        "w_k": ParamSpec((d_inner, d_inner), ("ssm_inner", None)),
+        "w_v": ParamSpec((d_inner, d_inner), ("ssm_inner", None)),
+        "w_if": ParamSpec((d, 2 * H), ("d_model", None), scale=0.02),
+        "b_if": ParamSpec((2 * H,), (None,), init="zeros"),
+        "w_down": ParamSpec((d_inner, d), ("ssm_inner", "d_model")),
+    }
+
+
+def _mlstm_step(dk: int):
+    scale = dk ** -0.5
+
+    def step(carry, xs_t):
+        C, n, m = carry                       # (B,H,dk,dv),(B,H,dk),(B,H)
+        q, k, v, log_i, log_f = xs_t          # (B,H,dk)x3, (B,H)x2
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_p = jnp.exp(log_i - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        C = f_p[..., None, None] * C \
+            + i_p[..., None, None] * k[..., :, None] * v[..., None, :]
+        n = f_p[..., None] * n + i_p[..., None] * k
+        num = jnp.einsum("bhkv,bhk->bhv", C, q * scale)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q * scale))
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), h
+    return step
+
+
+def _mlstm_inputs(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    d_inner, dk = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    heads = lambda a: a.reshape(B, S, H, dk).astype(jnp.float32)
+    q = heads(jnp.einsum("bsi,ij->bsj", xm, params["w_q"]))
+    k = heads(jnp.einsum("bsi,ij->bsj", xm, params["w_k"]))
+    v = heads(jnp.einsum("bsi,ij->bsj", xm, params["w_v"]))
+    gates = (jnp.einsum("bsd,dg->bsg", x, params["w_if"])
+             + params["b_if"]).astype(jnp.float32)
+    log_i, log_f = gates[..., :H], _logsigmoid(gates[..., H:])
+    return q, k, v, log_i, log_f, z, dk
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    _, dk = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, dk, dk), jnp.float32),
+            "n": jnp.zeros((batch, H, dk), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_mixer(params, x, cfg: ModelConfig, chunk: int = SCAN_CHUNK):
+    B, S, d = x.shape
+    q, k, v, log_i, log_f, z, dk = _mlstm_inputs(params, x, cfg)
+    st = mlstm_init_state(cfg, B)
+    # shard the matrix memory's value dim over TP: the (B,H,dk,dv) carry
+    # read+write per timestep dominates HBM traffic (§Perf H6); v carries
+    # the dv dim, so constraining v + C keeps every step-op local.
+    v = constrain(v, "batch", None, None, "tp")
+    C0 = constrain(st["C"], "batch", None, None, "tp")
+    swap = lambda a: a.swapaxes(0, 1)
+    _, hs = chunked_scan(_mlstm_step(dk), (C0, st["n"], st["m"]),
+                         tuple(map(swap, (q, k, v, log_i, log_f))), chunk)
+    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", h, params["w_down"])
+
+
+def mlstm_decode_step(params, x, state, cfg: ModelConfig):
+    q, k, v, log_i, log_f, z, dk = _mlstm_inputs(params, x, cfg)
+    (C, n, m), h = _mlstm_step(dk)(
+        (state["C"], state["n"], state["m"]),
+        (q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0]))
+    h = h[:, None].reshape(x.shape[0], 1, -1).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", h * jax.nn.silu(z), params["w_down"])
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    return {
+        "w_x": ParamSpec((d, 4 * d), ("d_model", "ssm_inner")),
+        "b_x": ParamSpec((4 * d,), ("ssm_inner",), init="zeros"),
+        # per-head recurrent matrices (block-diagonal structure)
+        "r_z": ParamSpec((H, dh, dh), (None, None, None), scale=0.02),
+        "r_i": ParamSpec((H, dh, dh), (None, None, None), scale=0.02),
+        "r_f": ParamSpec((H, dh, dh), (None, None, None), scale=0.02),
+        "r_o": ParamSpec((H, dh, dh), (None, None, None), scale=0.02),
+        "w_out": ParamSpec((d, d), ("ssm_inner", "d_model")),
+    }
+
+
+def _slstm_step(params, H: int):
+    def rec(w, h):
+        return jnp.einsum("bhi,hij->bhj", h, w)
+
+    def step(carry, xs_t):
+        c, n, m, h = carry                    # each (B,H,dh)
+        zx, ix, fx, ox = xs_t                 # each (B,H,dh)
+        z_t = jnp.tanh(zx + rec(params["r_z"], h))
+        i_raw = ix + rec(params["r_i"], h)
+        f_raw = fx + rec(params["r_f"], h)
+        o_t = jax.nn.sigmoid(ox + rec(params["r_o"], h))
+        log_f = _logsigmoid(f_raw)
+        m_new = jnp.maximum(log_f + m, i_raw)
+        i_p = jnp.exp(i_raw - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * z_t
+        n = f_p * n + i_p
+        h = o_t * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+    return step
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    zeros = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": jnp.full((batch, H, dh), -1e30,
+                                                  jnp.float32), "h": zeros}
+
+
+def _slstm_inputs(params, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    g = (jnp.einsum("bsd,de->bse", x, params["w_x"])
+         + params["b_x"]).astype(jnp.float32)
+    g = g.reshape(B, S, 4, H, dh)
+    return g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+
+
+def slstm_mixer(params, x, cfg: ModelConfig, chunk: int = SCAN_CHUNK):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    zx, ix, fx, ox = _slstm_inputs(params, x, cfg)
+    st = slstm_init_state(cfg, B)
+    swap = lambda a: a.swapaxes(0, 1)
+    _, hs = chunked_scan(_slstm_step(params, H),
+                         (st["c"], st["n"], st["m"], st["h"]),
+                         tuple(map(swap, (zx, ix, fx, ox))), chunk)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", h, params["w_out"])
+
+
+def slstm_decode_step(params, x, state, cfg: ModelConfig):
+    B = x.shape[0]
+    zx, ix, fx, ox = _slstm_inputs(params, x, cfg)
+    (c, n, m, h), h_out = _slstm_step(params, cfg.num_heads)(
+        (state["c"], state["n"], state["m"], state["h"]),
+        (zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0]))
+    out = jnp.einsum("bsi,id->bsd",
+                     h_out[:, None].reshape(B, 1, -1).astype(x.dtype),
+                     params["w_out"])
+    return out, {"c": c, "n": n, "m": m, "h": h}

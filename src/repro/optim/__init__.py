@@ -1,0 +1,5 @@
+"""Optimizers (pure-JAX, optax-style (init, update) pairs)."""
+from repro.optim.optimizers import (Optimizer, adam, clip_by_global_norm,
+                                    momentum, sgd)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "clip_by_global_norm"]

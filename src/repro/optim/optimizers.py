@@ -1,0 +1,84 @@
+"""Minimal optimizer library (no optax in the container).
+
+``Optimizer`` is an (init, update) pair over pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+Used by the local solvers (plain SGD per the paper) and by the big-model
+launcher (momentum / Adam for the e2e example).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return pt.add(params, updates)
+
+
+def sgd(learning_rate: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return pt.scale(grads, -learning_rate), state
+
+    return Optimizer(init, update)
+
+
+def momentum(learning_rate: float, beta: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return pt.zeros_like(params)
+
+    def update(grads, m, params=None):
+        m = pt.axpy(beta, m, grads)
+        g = pt.axpy(beta, m, grads) if nesterov else m
+        return pt.scale(g, -learning_rate), m
+
+    return Optimizer(init, update)
+
+
+def adam(learning_rate: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": pt.zeros_like(params), "v": pt.zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vi, g: b2 * vi + (1 - b2) * g * g, state["v"], grads)
+        mh = pt.scale(m, 1.0 / (1 - b1 ** t.astype(jnp.float32)))
+        vh = pt.scale(v, 1.0 / (1 - b2 ** t.astype(jnp.float32)))
+        upd = jax.tree_util.tree_map(
+            lambda mi, vi: -learning_rate * mi / (jnp.sqrt(vi) + eps),
+            mh, vh)
+        if weight_decay and params is not None:
+            upd = jax.tree_util.tree_map(
+                lambda u, p: u - learning_rate * weight_decay * p,
+                upd, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable:
+    def clip(grads):
+        n = pt.norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+        return pt.scale(grads, scale)
+
+    return clip

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Smoke tests and benches run on the single real CPU device; ONLY
+# launch/dryrun.py forces 512 placeholder devices (in its own process).
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

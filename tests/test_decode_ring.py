@@ -1,0 +1,47 @@
+"""Sliding-window ring-buffer decode: the long_500k mechanism.
+
+The cache holds the last ``window`` tokens; positions wrap modulo the
+capacity.  Because keys are RoPE'd at their absolute positions before
+insertion, attention is order-independent within the buffer — decoding
+must match a reference that attends over the true last-``window`` tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (cached_attention, full_attention,
+                                    update_cache)
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_ring_buffer_matches_window_reference():
+    B, H, hd, cap, T = 1, 2, 16, 8, 20
+    ks = jax.random.split(KEY, 3)
+    keys = jax.random.normal(ks[0], (B, T, H, hd))
+    vals = jax.random.normal(ks[1], (B, T, H, hd))
+    qs = jax.random.normal(ks[2], (B, T, H, hd))
+
+    kc = jnp.zeros((B, cap, H, hd))
+    vc = jnp.zeros((B, cap, H, hd))
+    for t in range(T):
+        kc, vc = update_cache(kc, vc, keys[:, t: t + 1], vals[:, t: t + 1],
+                              t)
+        got = cached_attention(qs[:, t: t + 1], kc, vc,
+                               cache_len=min(t + 1, cap))
+        lo = max(0, t + 1 - cap)
+        ref = full_attention(qs[:, t: t + 1], keys[:, lo: t + 1],
+                             vals[:, lo: t + 1], causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5,
+                                   err_msg=f"mismatch at step {t}")
+
+
+def test_effective_cache_len_caps_swa_archs():
+    from repro.configs import ARCHITECTURES
+    from repro.models.transformer import effective_cache_len
+    yi = ARCHITECTURES["yi-9b"]
+    assert effective_cache_len(yi, 524_288) == yi.sliding_window
+    assert effective_cache_len(yi, 4096) == 4096
+    xl = ARCHITECTURES["xlstm-350m"]
+    assert effective_cache_len(xl, 524_288) == 524_288  # no SWA: recurrent

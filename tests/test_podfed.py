@@ -1,0 +1,81 @@
+"""Pod-as-client FedDANE round (shard_map over the pod axis).
+
+Functional validation on a 1x1x1 mesh (the 512-device lowering is blocked
+by an XLA SPMD CHECK failure under partial-manual mode + gather ops; see
+DESIGN.md known limitations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.podfed import make_podfed_round_step
+from repro.models import init_params, model_specs
+from repro.models import transformer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = get_arch("qwen1.5-0.5b").reduced(num_layers=1, d_model=64,
+                                           vocab_size=128)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    return mesh, cfg, params
+
+
+def _state(params):
+    stack = jax.tree_util.tree_map(lambda x: x[None], params)
+    return {"params": stack, "anchor": stack,
+            "g_t": jax.tree_util.tree_map(jnp.zeros_like, stack)}
+
+
+def _batch(key, steps=2, b=2, s=16, vocab=128):
+    return {"tokens": jax.random.randint(key, (1, steps, b, s), 0, vocab),
+            "labels": jax.random.randint(key, (1, steps, b, s), 0, vocab)}
+
+
+def test_podfed_round_finite_and_decreasing(setup):
+    mesh, cfg, params = setup
+    with jax.set_mesh(mesh):
+        fn, _ = make_podfed_round_step(cfg, mesh, local_steps=2,
+                                       eta=5e-2, remat="none")
+        st = _state(params)
+        batch = _batch(jax.random.PRNGKey(1))
+        losses = []
+        for _ in range(3):
+            st, m = jax.jit(fn)(st, batch)
+            losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]  # repeated rounds on same data learn
+
+
+def test_podfed_matches_single_client_feddane(setup):
+    """With one pod (one client) and E=1, the pod-fed round must agree
+    with the plain FedDANE round step (same math, different plumbing)."""
+    from repro.launch import steps as S
+    mesh, cfg, params = setup
+    key = jax.random.PRNGKey(2)
+    with jax.set_mesh(mesh):
+        fn, _ = make_podfed_round_step(cfg, mesh, local_steps=1,
+                                       eta=1e-2, mu=0.01, remat="none")
+        st = _state(params)
+        batch = _batch(key, steps=1)
+        new_state, _ = jax.jit(fn)(st, batch)
+
+        plain = S.make_feddane_round_step(cfg, eta=1e-2, mu=0.01,
+                                          remat="none")
+        pbatch = {"tokens": batch["tokens"][0, 0],
+                  "labels": batch["labels"][0, 0]}
+        # podfed computes g_t fresh in phase A (single client: g_t ==
+        # grad at anchor); the plain step consumes it from state — feed
+        # the equivalent input.
+        g_anchor = jax.grad(
+            lambda p: transformer.loss_fn(p, pbatch, cfg, remat="none"))(
+                params)
+        pstate = {"params": params, "anchor": params, "g_t": g_anchor}
+        pnew, _ = jax.jit(plain)(pstate, pbatch)
+
+    for a, b in zip(jax.tree_util.tree_leaves(new_state["params"]),
+                    jax.tree_util.tree_leaves(pnew["params"])):
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b),
+                                   atol=2e-5)

@@ -1,0 +1,105 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import b_dissimilarity, server
+from repro.core import pytree as pt
+from repro.data.batching import pad_to_batches
+from repro.kernels.ops import dane_update_array
+from repro.kernels.ref import dane_update_ref
+
+SMALL = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@st.composite
+def tree_pair(draw):
+    n = draw(st.integers(2, 12))
+    a = draw(st.lists(SMALL, min_size=n, max_size=n))
+    b = draw(st.lists(SMALL, min_size=n, max_size=n))
+    return ({"w": jnp.array(a, jnp.float32)},
+            {"w": jnp.array(b, jnp.float32)})
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree_pair())
+def test_pytree_add_sub_inverse(pair):
+    a, b = pair
+    back = pt.sub(pt.add(a, b), b)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(a["w"]),
+                               atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(SMALL, min_size=4, max_size=4),
+                min_size=2, max_size=6))
+def test_aggregate_mean_permutation_invariant(vectors):
+    trees = [{"w": jnp.array(v, jnp.float32)} for v in vectors]
+    m1 = server.aggregate_mean(trees)
+    m2 = server.aggregate_mean(list(reversed(trees)))
+    np.testing.assert_allclose(np.asarray(m1["w"]), np.asarray(m2["w"]),
+                               atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(SMALL, min_size=3, max_size=3),
+                min_size=2, max_size=5))
+def test_aggregate_mean_within_hull(vectors):
+    """The aggregated iterate is coordinatewise within [min, max] of the
+    client iterates (convexity of averaging)."""
+    trees = [{"w": jnp.array(v, jnp.float32)} for v in vectors]
+    m = np.asarray(server.aggregate_mean(trees)["w"])
+    arr = np.array(vectors)
+    assert np.all(m <= arr.max(axis=0) + 1e-5)
+    assert np.all(m >= arr.min(axis=0) - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 57), st.integers(1, 9))
+def test_pad_to_batches_invariants(n, bs):
+    x = np.arange(n, dtype=np.float32)[:, None]
+    out = pad_to_batches({"x": x}, batch_size=bs)["x"]
+    nb = out.shape[0]
+    assert out.shape[1] == bs
+    assert nb * bs >= n
+    assert (nb & (nb - 1)) == 0            # bucketed to a power of two
+    # padding cycles the device's own examples
+    flat = np.asarray(out).reshape(-1)
+    np.testing.assert_allclose(flat, np.arange(nb * bs) % n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-4, 1.0),
+       st.floats(0.0, 5.0))
+def test_dane_kernel_matches_oracle(seed, eta, mu):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    w, g, c, a = [jax.random.normal(k, (96,)) for k in ks]
+    out = dane_update_array(w, g, c, a, eta, mu, interpret=True)
+    ref = dane_update_ref(w, g, c, a, eta=eta, mu=mu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(SMALL, min_size=4, max_size=4),
+                min_size=2, max_size=6))
+def test_b_dissimilarity_at_least_one(vectors):
+    """Definition 2: E||g_k||^2 >= ||E g_k||^2 (Jensen) -> B >= 1."""
+    grads = [{"w": jnp.array(v, jnp.float32)} for v in vectors]
+    gbar = server.aggregate_mean(grads)
+    if float(pt.norm_sq(gbar)) < 1e-8:
+        return  # B undefined at stationarity
+    assert b_dissimilarity(grads) >= 1.0 - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 30), st.integers(1, 30))
+def test_sample_devices_properties(seed, n, k):
+    rng = np.random.default_rng(seed)
+    p = rng.random(n) + 0.01
+    sel = server.sample_devices(rng, n, k, p=p, replace=False)
+    assert len(sel) == min(k, n)
+    assert len(set(sel.tolist())) == len(sel)      # no repeats
+    assert all(0 <= s < n for s in sel)

@@ -1,0 +1,168 @@
+"""Substrate tests: optimizers, checkpointing, data pipeline, sharding
+rules, HLO analysis."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, load_checkpoint, \
+    save_checkpoint
+from repro.core import pytree as pt
+from repro.data import (make_femnist_like, make_sent140_like,
+                        make_shakespeare_like, make_synthetic)
+from repro.launch.hloanalysis import analyze
+from repro.models.param import (ParamSpec, default_rules, init_params,
+                                param_count, param_pspecs, spec_pspec)
+from repro.optim import adam, momentum, sgd
+from repro.optim.optimizers import apply_updates
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def rosenbrock(p):
+    x, y = p["x"], p["y"]
+    return (1 - x) ** 2 + 100 * (y - x * x) ** 2
+
+
+@pytest.mark.parametrize("opt,steps,tol", [
+    (sgd(1e-3), 2000, 0.5),
+    (momentum(1e-3, 0.9), 2000, 0.3),
+    (adam(0.02), 1500, 0.05),
+])
+def test_optimizers_minimize(opt, steps, tol):
+    p = {"x": jnp.float32(-1.0), "y": jnp.float32(1.0)}
+    state = opt.init(p)
+
+    @jax.jit
+    def step(p, state):
+        g = jax.grad(rosenbrock)(p)
+        upd, state = opt.update(g, state, p)
+        return apply_updates(p, upd), state
+
+    for _ in range(steps):
+        p, state = step(p, state)
+    assert float(rosenbrock(p)) < tol
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.array([1, 2], jnp.int32), "d": 3.5,
+                  "e": (jnp.ones(2), "tag")}}
+    path = save_checkpoint(str(tmp_path), tree, step=7)
+    assert latest_checkpoint(str(tmp_path)) == path
+    back = load_checkpoint(path)
+    np.testing.assert_allclose(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"]["d"] == 3.5
+    assert back["b"]["e"][1] == "tag"
+    # multiple steps -> latest wins
+    save_checkpoint(str(tmp_path), tree, step=3)
+    assert latest_checkpoint(str(tmp_path)).endswith("00000007.msgpack")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_matches_paper_setup():
+    ds = make_synthetic(1, 1, num_devices=30, seed=0)
+    s = ds.stats()
+    assert s["devices"] == 30
+    assert abs(sum(ds.weights) - 1.0) < 1e-9
+    b = ds.device_batches(0)
+    assert b["x"].ndim == 3 and b["x"].shape[1] == 10   # (nb, batch, feat)
+    assert b["x"].shape[2] == 60
+    assert int(b["y"].max()) < 10
+
+
+def test_leaf_like_table1_statistics():
+    """Device counts match Table I; per-device sample stats are in range."""
+    fem = make_femnist_like(num_devices=50, seed=0)
+    assert fem.stats()["devices"] == 50
+    assert 20 < fem.stats()["mean"] < 250
+    sent = make_sent140_like(num_devices=40, seed=0)
+    assert 25 < sent.stats()["mean"] < 110
+    shak = make_shakespeare_like(num_devices=10, seed=0, sample_cap=64)
+    assert shak.stats()["devices"] == 10
+    b = shak.device_batches(0)
+    assert b["tokens"].shape[2] == 80
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(np.asarray(b["tokens"][0, 0, 1:]),
+                                  np.asarray(b["labels"][0, 0, :-1]))
+
+
+def test_devices_are_heterogeneous():
+    """Different devices draw from different distributions (class mix)."""
+    fem = make_femnist_like(num_devices=12, seed=0)
+    hists = []
+    for k in range(6):
+        y = np.asarray(fem.device_batches(k)["y"]).reshape(-1)
+        hists.append(np.bincount(y, minlength=10) / len(y))
+    pair_dists = [np.abs(hists[i] - hists[j]).sum()
+                  for i in range(6) for j in range(i)]
+    assert max(pair_dists) > 0.5   # strongly non-identical class mixes
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_pspec_divisibility_and_conflicts():
+    import jax.sharding as shd
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = default_rules()
+    # kv_heads=3 not divisible by model axis (1 divides everything here,
+    # so emulate with a fake mesh check through the rules API on shapes)
+    spec = ParamSpec((4, 6), ("d_model", "d_ff"))
+    ps = spec_pspec(spec, rules, mesh)
+    assert len(ps) == 2
+    # same mesh axis requested twice -> second occurrence dropped
+    spec2 = ParamSpec((4, 4), ("d_ff", "heads"))  # both -> model
+    ps2 = spec_pspec(spec2, rules, mesh)
+    axes_used = [a for a in ps2 if a is not None]
+    assert len(axes_used) <= 1
+
+
+def test_param_count_qwen_0_5b_plausible():
+    from repro.configs import get_arch
+    from repro.models import model_specs
+    n = param_count(model_specs(get_arch("qwen1.5-0.5b")))
+    assert 0.3e9 < n < 0.7e9   # ~0.46B known
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (loop-aware roofline accounting)
+# ---------------------------------------------------------------------------
+
+def test_hlo_analyzer_counts_loop_multiplicity():
+    """A scanned matmul must be counted trips x, not once."""
+    def f(w, x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out.sum()
+
+    w = jnp.zeros((64, 64))
+    x = jnp.zeros((4, 64))
+    txt = jax.jit(f).lower(w, x).compile().as_text()
+    res = analyze(txt)
+    expected = 8 * 2 * 4 * 64 * 64          # trips x 2MNK
+    assert res["dot_flops"] == pytest.approx(expected, rel=0.01), \
+        (res["dot_flops"], expected)
+
+
+def test_hlo_analyzer_no_loops_exact():
+    def f(a, b):
+        return (a @ b).sum()
+    a = jnp.zeros((32, 16))
+    b = jnp.zeros((16, 8))
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    res = analyze(txt)
+    assert res["dot_flops"] == pytest.approx(2 * 32 * 16 * 8, rel=0.01)
