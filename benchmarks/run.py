@@ -16,7 +16,7 @@ def main() -> None:
 
     from benchmarks import (fig1_convergence, fig2_participation,
                             fig3_unrealistic, fig4_variants, kernelbench,
-                            table1_datasets)
+                            round_engine, table1_datasets)
     modules = [
         ("table1", table1_datasets),
         ("fig1", fig1_convergence),
@@ -24,6 +24,7 @@ def main() -> None:
         ("fig3", fig3_unrealistic),
         ("fig4", fig4_variants),
         ("kernels", kernelbench),
+        ("round_engine", round_engine),
     ]
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -37,7 +37,7 @@ def main():
                               local_epochs=5, learning_rate=0.01, seed=1,
                               **kw)
         tr = FederatedTrainer(logreg_loss, dataset, cfg)
-        hist = tr.run(params0, num_rounds=15, eval_every=15)
+        hist, _ = tr.run(params0, num_rounds=15, eval_every=15)
         print(f"{algo:20s} {hist['loss'][-1]:>10.4f} "
               f"{hist['comm_rounds'][-1]:>12d}")
     print("\ndecayed FedDANE anneals toward FedProx (fixing divergence); "

@@ -25,7 +25,7 @@ def main():
                               local_epochs=5, learning_rate=0.01, mu=mu,
                               seed=1)
         trainer = FederatedTrainer(logreg_loss, dataset, cfg)
-        hist = trainer.run(params0, num_rounds=15, eval_every=5)
+        hist, _ = trainer.run(params0, num_rounds=15, eval_every=5)
         losses = " -> ".join(f"{l:.3f}" for l in hist["loss"])
         print(f"{algo:8s} (mu={mu}): loss {losses} "
               f"[{hist['comm_rounds'][-1]} comm rounds]")

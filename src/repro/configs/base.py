@@ -170,3 +170,12 @@ class FederatedConfig:
     # decayed FedDANE (paper §V-C): correction scaled by decay^t
     correction_decay: float = 1.0
     seed: int = 0
+    # round execution engine (core/engine.py):
+    #   "batched" — one jitted vmapped program per round (accelerator hot
+    #               path: fused Pallas update, MXU-amortized device axis)
+    #   "loop"    — per-device dispatch; independent numerical reference
+    #   "auto"    — "batched" on accelerators, "loop" on CPU (XLA:CPU
+    #               serializes per-device batched dots, so lockstep
+    #               batching pessimizes CPU rounds — see
+    #               benchmarks/round_engine.py)
+    engine: str = "auto"

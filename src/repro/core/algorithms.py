@@ -1,8 +1,8 @@
 """Federated optimization algorithms (paper Alg. 1 & 2 + §V-C variants).
 
 ``FederatedTrainer`` orchestrates simulation rounds over a federated
-dataset.  All algorithms share one jitted local solver (see client.py);
-they differ only in (corr, mu) handed to each selected device and in the
+dataset.  All algorithms share one local solver (see client.py); they
+differ only in (corr, mu) handed to each selected device and in the
 communication pattern:
 
 - fedavg            McMahan et al. — Alg. 1
@@ -12,13 +12,33 @@ communication pattern:
 - feddane_pipelined §V-C — stale gradient correction, ONE round per update
 - feddane_decayed   §V-C — correction term decayed by ``correction_decay^t``
 - scaffold          Karimireddy et al. — control variates (beyond paper)
+
+Every algorithm runs on one of two interchangeable engines, selected by
+``FederatedConfig.engine``:
+
+- ``"batched"`` (accelerator hot path): the whole round is ONE jitted
+  program — selected devices are stacked along a leading axis, local
+  solves and full gradients are vmapped, and the SGD step runs through
+  the fused ``dane_update`` Pallas kernel (see core/engine.py).
+- ``"loop"`` (reference): one jitted solver/grad dispatch per device
+  with plain pytree-op updates.  Numerically equivalent (parity pinned
+  by tests/test_engine.py) and authoritative when in doubt — it is an
+  independent implementation of the same round semantics.
+- ``"auto"`` (default): "batched" on accelerators, "loop" on CPU —
+  XLA:CPU serializes per-device batched dots, so the lockstep program
+  measurably pessimizes CPU rounds (see benchmarks/round_engine.py).
+
+Sampling happens identically (same rng stream) under both engines, so a
+fixed seed yields the same device selections and — to float-accumulation
+order — the same trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.configs.base import FederatedConfig
@@ -26,6 +46,8 @@ from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import (LocalResult, gamma_inexactness, make_grad_fn,
                                make_local_solver)
+from repro.core.engine import RoundEngine
+from repro.data.batching import num_batches_of, stack_device_batches
 
 TWO_ROUND_ALGOS = {"feddane", "inexact_dane"}
 
@@ -59,6 +81,16 @@ class FederatedTrainer:
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
         self.grad_fn = make_grad_fn(loss_fn)
+        engine = cfg.engine
+        if engine == "auto":
+            engine = "batched" if jax.default_backend() != "cpu" else "loop"
+        if engine == "batched":
+            self.engine: Optional[RoundEngine] = RoundEngine(loss_fn, cfg)
+        elif engine == "loop":
+            self.engine = None
+        else:
+            raise ValueError(f"unknown engine {cfg.engine!r}")
+        self._eval_loss = _make_eval_loss(loss_fn)
 
     # -- helpers ----------------------------------------------------------
 
@@ -70,6 +102,9 @@ class FederatedTrainer:
 
     def _batches(self, k: int):
         return self.dataset.device_batches(int(k))
+
+    def _stack(self, indices):
+        return stack_device_batches(self.dataset, indices)
 
     def init(self, params) -> FederatedState:
         st = FederatedState(params=params)
@@ -86,72 +121,111 @@ class FederatedTrainer:
     def round(self, st: FederatedState) -> FederatedState:
         algo = self.cfg.algorithm
         w0, mu = st.params, self.cfg.mu
-        zeros = pt.zeros_like(w0)
+        eng = self.engine
 
         if algo in ("fedavg", "fedprox"):
             S = self._sample()
             mu_eff = 0.0 if algo == "fedavg" else mu
-            updates = [self.solver(w0, zeros, mu_eff, self._batches(k)).params
-                       for k in S]
-            st.params = server.aggregate_mean(updates)
+            if eng is not None:
+                b, v = self._stack(S)
+                st.params = eng.avg_round(w0, b, v, mu_eff)
+            else:
+                zeros = pt.zeros_like(w0)
+                updates = [
+                    self.solver(w0, zeros, mu_eff, self._batches(k)).params
+                    for k in S]
+                st.params = server.aggregate_mean(updates)
             st.comm_rounds += 1
 
         elif algo in ("feddane", "inexact_dane", "feddane_decayed"):
-            # Phase A (Alg. 2 lines 3-6): approximate full gradient
-            if algo == "inexact_dane":
-                S1 = np.arange(self.dataset.num_devices)
-            else:
-                S1 = self._sample()
-            g_t = server.aggregate_gradients(
-                [self.grad_fn(w0, self._batches(k)) for k in S1])
+            # Phase A (Alg. 2 lines 3-6) approximates the full gradient
+            # over S1; phase B (lines 7-9) has S2 solve the subproblem.
+            full = np.arange(self.dataset.num_devices)
+            S1 = full if algo == "inexact_dane" else self._sample()
+            S2 = full if algo == "inexact_dane" else self._sample()
             decay = (self.cfg.correction_decay ** st.round
                      if algo == "feddane_decayed" else 1.0)
-            # Phase B (lines 7-9): second subset solves the subproblem
-            S2 = (np.arange(self.dataset.num_devices)
-                  if algo == "inexact_dane" else self._sample())
-            updates = []
-            for k in S2:
-                bk = self._batches(k)
-                corr = pt.scale(pt.sub(g_t, self.grad_fn(w0, bk)), decay)
-                updates.append(self.solver(w0, corr, mu, bk).params)
-            st.params = server.aggregate_mean(updates)
+            if eng is not None:
+                if S1 is S2:   # full participation: one stack, one pass
+                    b, v = self._stack(S1)
+                    st.params = eng.dane_shared_round(w0, b, v, mu, decay)
+                else:
+                    b1, v1 = self._stack(S1)
+                    b2, v2 = self._stack(S2)
+                    st.params = eng.dane_round(w0, b1, v1, b2, v2, mu,
+                                               decay)
+            else:
+                g_t = server.aggregate_gradients(
+                    [self.grad_fn(w0, self._batches(k)) for k in S1])
+                updates = []
+                for k in S2:
+                    bk = self._batches(k)
+                    corr = pt.scale(pt.sub(g_t, self.grad_fn(w0, bk)),
+                                    decay)
+                    updates.append(self.solver(w0, corr, mu, bk).params)
+                st.params = server.aggregate_mean(updates)
             st.comm_rounds += 2
 
         elif algo == "feddane_pipelined":
             # §V-C: one round — local solve uses the STALE g from the
             # previous round; this round's gradients refresh it.
             S = self._sample()
-            updates, grads = [], []
-            for k in S:
-                bk = self._batches(k)
-                gk = self.grad_fn(w0, bk)
-                grads.append(gk)
-                corr = pt.sub(st.g_prev, gk)
-                updates.append(self.solver(w0, corr, mu, bk).params)
-            st.params = server.aggregate_mean(updates)
-            st.g_prev = server.aggregate_gradients(grads)
+            if eng is not None:
+                b, v = self._stack(S)
+                st.params, st.g_prev = eng.pipelined_round(
+                    w0, st.g_prev, b, v, mu)
+            else:
+                updates, grads = [], []
+                for k in S:
+                    bk = self._batches(k)
+                    gk = self.grad_fn(w0, bk)
+                    grads.append(gk)
+                    corr = pt.sub(st.g_prev, gk)
+                    updates.append(self.solver(w0, corr, mu, bk).params)
+                st.params = server.aggregate_mean(updates)
+                st.g_prev = server.aggregate_gradients(grads)
             st.comm_rounds += 1
 
         elif algo == "scaffold":
             S = self._sample()
-            steps = self.cfg.local_epochs * jax_nb(self._batches(int(S[0])))
-            updates = []
-            for k in S:
-                bk = self._batches(k)
-                corr = pt.sub(st.c_server, st.controls[int(k)])
-                res = self.solver(w0, corr, 0.0, bk)
-                updates.append(res.params)
-                nsteps = self.cfg.local_epochs * jax_nb(bk)
-                ck_new = pt.add(
-                    pt.sub(st.controls[int(k)], st.c_server),
-                    pt.scale(pt.sub(w0, res.params),
-                             1.0 / (nsteps * self.cfg.learning_rate)))
+            # With replacement, duplicated selections must update controls
+            # sequentially (twice); the batched scatter would apply them
+            # once — route to the authoritative looped path.
+            if self.cfg.sample_with_replacement:
+                eng = None
+            if eng is not None:
+                b, v = self._stack(S)
+                c_k = jax.tree_util.tree_map(
+                    lambda *xs: jax.numpy.stack(xs),
+                    *[st.controls[int(k)] for k in S])
+                st.params, st.c_server, c_new = eng.scaffold_round(
+                    w0, st.c_server, c_k, b, v,
+                    float(self.dataset.num_devices))
+                for i, k in enumerate(S):
+                    st.controls[int(k)] = jax.tree_util.tree_map(
+                        lambda x, i=i: x[i], c_new)
+            else:
+                # Karimireddy et al. option II: corrections use the
+                # ROUND-START server control; c_server absorbs the
+                # (1/N)-scaled correction deltas once, after the loop.
+                c0 = st.c_server
+                updates, deltas = [], []
+                for k in S:
+                    bk = self._batches(k)
+                    corr = pt.sub(c0, st.controls[int(k)])
+                    res = self.solver(w0, corr, 0.0, bk)
+                    updates.append(res.params)
+                    nsteps = self.cfg.local_epochs * num_batches_of(bk)
+                    ck_new = pt.add(
+                        pt.sub(st.controls[int(k)], c0),
+                        pt.scale(pt.sub(w0, res.params),
+                                 1.0 / (nsteps * self.cfg.learning_rate)))
+                    deltas.append(pt.sub(ck_new, st.controls[int(k)]))
+                    st.controls[int(k)] = ck_new
                 st.c_server = pt.add(
-                    st.c_server,
-                    pt.scale(pt.sub(ck_new, st.controls[int(k)]),
-                             1.0 / self.dataset.num_devices))
-                st.controls[int(k)] = ck_new
-            st.params = server.aggregate_mean(updates)
+                    c0, pt.scale(pt.mean(deltas),
+                                 len(deltas) / self.dataset.num_devices))
+                st.params = server.aggregate_mean(updates)
             st.comm_rounds += 1
 
         else:
@@ -166,22 +240,10 @@ class FederatedTrainer:
         """f(w) = sum_k p_k F_k(w)  (eq. 1)."""
         total, wsum = 0.0, 0.0
         for wk, batches in self.dataset.eval_batches():
-            losses = self._device_loss(params, batches)
+            losses = self._eval_loss(params, batches)
             total += wk * float(losses)
             wsum += wk
         return total / max(wsum, 1e-12)
-
-    def _device_loss(self, params, batches):
-        import jax
-
-        @jax.jit
-        def f(p, b):
-            def body(acc, batch):
-                return acc + self.loss_fn(p, batch), None
-            s, _ = jax.lax.scan(body, 0.0, b)
-            nb = jax.tree_util.tree_leaves(b)[0].shape[0]
-            return s / nb
-        return f(params, batches)
 
     def measure_dissimilarity(self, params) -> float:
         from repro.core.theory import b_dissimilarity
@@ -190,7 +252,9 @@ class FederatedTrainer:
         return b_dissimilarity(grads, self.dataset.weights)
 
     def run(self, params, num_rounds: int, eval_every: int = 1,
-            verbose: bool = False) -> Dict[str, List[float]]:
+            verbose: bool = False) -> Tuple[Dict[str, List[float]], Any]:
+        """Run ``num_rounds`` rounds; returns ``(history, final_params)``.
+        ``history`` holds only float lists (round / comm_rounds / loss)."""
         st = self.init(params)
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
                                         "loss": []}
@@ -204,10 +268,20 @@ class FederatedTrainer:
                 if verbose:
                     print(f"[{self.cfg.algorithm}] round {st.round:4d} "
                           f"comm {st.comm_rounds:4d} loss {loss:.4f}")
-        hist["params"] = st.params  # type: ignore[assignment]
-        return hist
+        return hist, st.params
 
 
-def jax_nb(batches) -> int:
-    import jax
-    return jax.tree_util.tree_leaves(batches)[0].shape[0]
+def _make_eval_loss(loss_fn: Callable) -> Callable:
+    """One jitted per-device eval-loss fn per trainer (hoisted out of
+    ``global_loss``, which used to rebuild — and so recompile — a fresh
+    closure on every call)."""
+
+    @jax.jit
+    def f(p, b):
+        def body(acc, batch):
+            return acc + loss_fn(p, batch), None
+        s, _ = jax.lax.scan(body, 0.0, b)
+        nb = jax.tree_util.tree_leaves(b)[0].shape[0]
+        return s / nb
+
+    return f

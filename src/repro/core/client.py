@@ -1,4 +1,4 @@
-"""Client-side local solvers.
+"""Client-side local solvers: per-device (looped reference) and batched.
 
 Every algorithm in the paper reduces to "run E epochs of minibatch SGD on a
 *perturbed* local objective": the perturbation is a linear term (gradient
@@ -7,9 +7,21 @@ scan-based solver per (loss_fn, batch-shape) and reuses it across devices
 and rounds; the perturbation state is traced arguments, so FedAvg/FedProx/
 FedDANE/SCAFFOLD all share one compiled executable.
 
+``make_batched_solver`` / ``make_batched_grad_fn`` are the device-parallel
+variants used by the batched round engine (core/engine.py): all K selected
+devices advance in lockstep through a single scan whose per-step gradient
+is ``jax.vmap``-ed over the leading device axis and whose SGD update runs
+through the fused ``dane_update`` Pallas kernel (one launch per parameter
+leaf for all K devices).  ``make_local_solver`` deliberately keeps the
+plain 4-op pytree update so the looped path stays an *independent*
+numerical reference for the kernel path.
+
 Device data arrives as fixed-shape padded batch stacks
 ``(num_batches, batch_size, ...)`` with a per-example weight mask, produced
-by ``repro.data.batching`` (bucketed to bound recompilation).
+by ``repro.data.batching`` (bucketed to bound recompilation).  Batched
+solvers additionally take a ``(K, num_batches)`` validity mask; masked
+batches contribute zero gradient weight and an identity SGD step, which
+keeps exact parity with running the scalar solver per device.
 """
 from __future__ import annotations
 
@@ -68,6 +80,92 @@ def make_local_solver(loss_fn: Callable, *, learning_rate: float,
     return solve
 
 
+def _batch_weight(batch) -> jnp.ndarray:
+    """Per-batch gradient weight: the example-mask sum when the data layer
+    provides one, else 1.0 (uniform batches)."""
+    if isinstance(batch, dict) and "w" in batch:
+        return batch["w"].sum()
+    return jnp.float32(1.0)
+
+
+def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
+                        num_epochs: int) -> Callable:
+    """Device-parallel E-epoch SGD solver for DANE-type subproblems.
+
+    ``solve(w0, corr, mu, batches, valid) -> LocalResult`` where
+
+    - ``w0``:      unbatched anchor pytree (broadcast to every device),
+    - ``corr``:    pytree with a leading device axis K (per-device
+                   gradient correction),
+    - ``batches``: leaves ``(K, num_batches, batch, ...)`` from
+                   ``data.batching.stack_device_batches``,
+    - ``valid``:   float ``(K, num_batches)`` mask; masked steps are
+                   identity so devices with fewer batches than the
+                   stacked maximum follow exactly the trajectory the
+                   scalar solver would give them.
+
+    All K devices run in lockstep: the per-batch gradient is vmapped over
+    the device axis and the update is the fused ``dane_update`` kernel
+    applied to the device-stacked leaves (interpret on CPU, Mosaic on
+    TPU).  Returned leaves keep the leading K axis.
+    """
+    from repro.kernels import ops as kops
+
+    grad_fn = jax.vmap(jax.grad(loss_fn))
+
+    def solve(w0, corr, mu, batches, valid) -> LocalResult:
+        K = valid.shape[0]
+        anchor = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (K,) + x.shape), w0)
+
+        def batch_step(w, xs):
+            batch, v = xs                       # leaves (K, b, ...), (K,)
+            g = grad_fn(w, batch)
+            return kops.dane_update_masked(
+                w, g, corr, anchor, learning_rate, mu, v), None
+
+        # scan wants the scanned axis leading: (nb, K, batch, ...)
+        batches_t = jax.tree_util.tree_map(
+            lambda x: jnp.swapaxes(x, 0, 1), batches)
+        valid_t = valid.T
+
+        def epoch(w, _):
+            w, _ = jax.lax.scan(batch_step, w, (batches_t, valid_t))
+            return w, None
+
+        w, _ = jax.lax.scan(epoch, anchor, None, length=num_epochs)
+        return LocalResult(w, pt.sub(w, anchor),
+                           (num_epochs * valid.sum(axis=1)).astype(jnp.int32))
+
+    return solve
+
+
+def make_batched_grad_fn(loss_fn: Callable) -> Callable:
+    """Full local gradients for a device-stacked selection.
+
+    ``grads(w, batches, valid) -> pytree`` with leading device axis K:
+    per device the weighted mean gradient over its *valid* batches —
+    numerically identical to ``make_grad_fn`` run per device (masked
+    batches contribute exactly 0.0 to both accumulators).
+    """
+
+    def full_grad_one(w, batches, valid):
+        grad_fn = jax.grad(loss_fn)
+
+        def body(acc, xs):
+            batch, v = xs
+            g = grad_fn(w, batch)
+            wsum = _batch_weight(batch) * v
+            return (pt.add(acc[0], pt.scale(g, wsum)), acc[1] + wsum), None
+
+        zero = pt.zeros_like(w)
+        (gsum, wsum), _ = jax.lax.scan(
+            body, (zero, jnp.float32(0.0)), (batches, valid))
+        return pt.scale(gsum, 1.0 / jnp.maximum(wsum, 1e-9))
+
+    return jax.vmap(full_grad_one, in_axes=(None, 0, 0))
+
+
 def make_grad_fn(loss_fn: Callable) -> Callable:
     """Full local gradient over all of a device's (padded) batches.
 
@@ -81,8 +179,7 @@ def make_grad_fn(loss_fn: Callable) -> Callable:
 
         def body(acc, batch):
             g = grad_fn(w, batch)
-            wsum = batch["w"].sum() if isinstance(batch, dict) and "w" in batch \
-                else jnp.float32(1.0)
+            wsum = _batch_weight(batch)
             return (pt.add(acc[0], pt.scale(g, wsum)), acc[1] + wsum), None
 
         zero = pt.zeros_like(w)

@@ -1,0 +1,166 @@
+"""Batched round engine: whole federated rounds as single jitted programs.
+
+The looped path in ``FederatedTrainer`` dispatches one jitted solver /
+grad call *per selected device* and aggregates host-side lists — at K
+devices per round that is O(K) dispatches, O(K) host round-trips, and a
+Python-level mean.  DANE's structure makes this unnecessary: every device
+solves the *same* perturbed subproblem, only its data and correction
+differ.  This module exploits that:
+
+- the K selected devices' padded batch stacks are stacked along a
+  leading device axis (``data.batching.stack_device_batches``; bucketed
+  power-of-two shapes bound recompilation),
+- the local solver and the full-gradient are ``jax.vmap``-ed over that
+  axis (``client.make_batched_solver`` / ``make_batched_grad_fn``),
+- all sampling-independent phases of a round — FedDANE phase-A gradient
+  aggregation, per-device correction construction, phase-B solves, and
+  the server mean — fuse into **one jitted round function per algorithm
+  family**, with parameter buffers donated on accelerator backends,
+- inside the solver, the per-step update runs through the fused
+  ``dane_update`` Pallas kernel (interpret on CPU, Mosaic on TPU)
+  instead of the 4-op pytree expression.
+
+Execution model
+---------------
+Devices advance in lockstep: step j of the scan applies batch j of every
+device at once.  Devices whose (bucketed) stack is shorter than the
+stacked maximum take masked identity steps, so each device's trajectory
+is *exactly* the one the scalar solver would produce — the two engines
+agree to float-accumulation order (parity tests pin this at atol 1e-5).
+
+The looped path (``FederatedConfig.engine = "loop"``) remains the
+authoritative reference: it is an independent implementation (plain
+pytree ops, per-device dispatch) used to A/B the engine and to validate
+the Pallas kernel end-to-end.  Semantics the engine does not accelerate:
+``sample_with_replacement=True`` under SCAFFOLD would update duplicated
+device controls once, not twice (the looped path applies duplicates
+sequentially), so ``FederatedTrainer`` routes that combination to the
+looped path even when ``engine="batched"``.
+
+Round-function signatures take scalars (mu, decay, ...) as traced
+arguments, so one compiled executable serves the paper's whole
+(mu, participation) tuning grid at a given stacked shape.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig
+from repro.core import pytree as pt
+from repro.core import server
+from repro.core.client import make_batched_grad_fn, make_batched_solver
+
+
+def _donate_argnums(nums: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Donate round-state buffers on accelerators; CPU ignores donation
+    (and warns), so skip it there."""
+    return nums if jax.default_backend() != "cpu" else ()
+
+
+def _stack_zeros(w0, k: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((k,) + x.shape, x.dtype), w0)
+
+
+class RoundEngine:
+    """Per-trainer factory of the four jitted round programs.
+
+    One instance is built per ``FederatedTrainer`` (it bakes in loss_fn,
+    learning rate and epoch count); jit caching is keyed by the stacked
+    batch shapes, which the data layer's power-of-two bucketing bounds.
+    """
+
+    def __init__(self, loss_fn: Callable, cfg: FederatedConfig):
+        self.cfg = cfg
+        self._solver = make_batched_solver(
+            loss_fn, learning_rate=cfg.learning_rate,
+            num_epochs=cfg.local_epochs)
+        self._grads = make_batched_grad_fn(loss_fn)
+        # Donate only trainer-owned round state (g_prev / c_server /
+        # stacked controls).  w0 is NOT donated: on round 1 it is the
+        # caller's params buffer, which examples and benchmarks reuse.
+        self.avg_round = jax.jit(self._avg_round)
+        self.dane_round = jax.jit(self._dane_round)
+        self.dane_shared_round = jax.jit(self._dane_shared_round)
+        self.pipelined_round = jax.jit(
+            self._pipelined_round, donate_argnums=_donate_argnums((1,)))
+        self.scaffold_round = jax.jit(
+            self._scaffold_round, donate_argnums=_donate_argnums((1, 2)))
+
+    # -- round programs (pure; jitted in __init__) ------------------------
+
+    def _avg_round(self, w0, batches, valid, mu):
+        """FedAvg / FedProx: K local solves (corr = 0) + server mean."""
+        corr = _stack_zeros(w0, valid.shape[0])
+        res = self._solver(w0, corr, mu, batches, valid)
+        return server.aggregate_stacked(res.params)
+
+    def _dane_round(self, w0, batches_a, valid_a, batches_b, valid_b,
+                    mu, decay):
+        """FedDANE / decayed FedDANE (Alg. 2, both phases, S1 != S2).
+
+        Phase A (lines 3-6): g_t as the mean full gradient over the first
+        selection.  Phase B (lines 7-9): the second selection solves the
+        corrected subproblem; corrections are built per-device on the
+        stacked axis.
+        """
+        g_a = self._grads(w0, batches_a, valid_a)
+        g_t = server.aggregate_stacked(g_a)                # Alg. 2 line 6
+        g_b = self._grads(w0, batches_b, valid_b)
+        corr = jax.tree_util.tree_map(
+            lambda gt, gk: (gt[None] - gk) * decay, g_t, g_b)
+        res = self._solver(w0, corr, mu, batches_b, valid_b)
+        return server.aggregate_stacked(res.params)        # Alg. 2 line 9
+
+    def _dane_shared_round(self, w0, batches, valid, mu, decay):
+        """Alg. 2 with S1 == S2 (inexact DANE / full participation): the
+        phase-A gradients ARE the phase-B per-device gradients, so the
+        full-gradient pass runs once and is reused — numerically identical
+        to the looped reference, which recomputes the same deterministic
+        values."""
+        g = self._grads(w0, batches, valid)
+        g_t = server.aggregate_stacked(g)
+        corr = jax.tree_util.tree_map(
+            lambda gt, gk: (gt[None] - gk) * decay, g_t, g)
+        res = self._solver(w0, corr, mu, batches, valid)
+        return server.aggregate_stacked(res.params)
+
+    def _pipelined_round(self, w0, g_prev, batches, valid, mu):
+        """§V-C pipelined FedDANE: ONE communication round — solves use
+        the stale g from the previous round while this round's gradients
+        refresh it; both happen in the same fused program."""
+        g_k = self._grads(w0, batches, valid)
+        corr = jax.tree_util.tree_map(
+            lambda gp, gk: gp[None] - gk, g_prev, g_k)
+        res = self._solver(w0, corr, mu, batches, valid)
+        return (server.aggregate_stacked(res.params),
+                server.aggregate_stacked(g_k))
+
+    def _scaffold_round(self, w0, c_server, controls, batches, valid,
+                        num_devices):
+        """SCAFFOLD: control-variate corrections built from the
+        round-start server control; c_server takes its (1/N)-scaled
+        correction sum once at the end of the round (Karimireddy et al.
+        option II), matching the looped reference."""
+        corr = jax.tree_util.tree_map(
+            lambda cs, ck: cs[None] - ck, c_server, controls)
+        res = self._solver(w0, corr, 0.0, batches, valid)
+        nsteps = (self.cfg.local_epochs * valid.sum(axis=1))  # (K,)
+        inv = 1.0 / (nsteps * self.cfg.learning_rate)
+
+        def ck_new_leaf(ck, cs, w0_leaf, w):
+            scale = inv.reshape(inv.shape + (1,) * (w.ndim - 1))
+            return (ck - cs[None]) + scale * (w0_leaf[None] - w)
+
+        controls_new = jax.tree_util.tree_map(
+            ck_new_leaf, controls, c_server, w0, res.params)
+        delta = server.aggregate_stacked(
+            pt.sub(controls_new, controls))                # (1/K) sum_k
+        k = jnp.float32(valid.shape[0])
+        c_server_new = jax.tree_util.tree_map(
+            lambda cs, d: cs + d * (k / num_devices), c_server, delta)
+        return (server.aggregate_stacked(res.params),
+                c_server_new, controls_new)

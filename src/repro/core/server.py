@@ -35,3 +35,12 @@ def aggregate_weighted(updates: List, weights: Sequence[float]) -> object:
 def aggregate_gradients(grads: List) -> object:
     """g_t = (1/K) sum_{k in S_t} grad F_k(w^{t-1})  (Alg. 2 line 6)."""
     return pt.mean(grads)
+
+
+def aggregate_stacked(tree) -> object:
+    """Mean over a leading device axis of a stacked pytree — the batched
+    round engine's form of ``aggregate_mean``/``aggregate_gradients``
+    (stays on device, no per-update host transfers)."""
+    import jax
+
+    return jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)

@@ -5,12 +5,21 @@ its own examples (so every batch is a valid sample of the device's local
 distribution), then reshaped to ``(num_batches, batch_size, ...)``.
 ``num_batches`` is bucketed to the next power of two so the jitted local
 solver compiles O(log max_batches) times, not once per device.
+
+``stack_device_batches`` builds the input of the batched round engine
+(core/engine.py): the K selected devices' batch stacks are padded (again
+by cycling whole batches) to the max bucketed ``num_batches`` in the
+selection and stacked along a new leading device axis, together with a
+``(K, num_batches)`` validity mask.  Because per-device ``num_batches``
+is already a power of two, the stacked shape is too, so the engine's
+jitted round functions compile O(log max_batches) times.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -35,6 +44,50 @@ def pad_to_batches(arrays: Dict[str, np.ndarray], batch_size: int,
     return out
 
 
+def num_batches_of(batches) -> int:
+    """Leading (num_batches) dim of one device's padded batch stack."""
+    return jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+
+def pad_batch_stack(batches, nb: int):
+    """Pad a ``(num_batches, batch, ...)`` stack to ``nb`` batches by
+    cycling whole batches (each padded batch is a real batch of the same
+    device, so gradients stay finite; the engine masks them out)."""
+    cur = num_batches_of(batches)
+    if nb < cur:
+        raise ValueError(
+            f"pad_batch_stack: target nb={nb} < current {cur} batches "
+            "would silently drop device data")
+    if cur == nb:
+        return batches
+    idx = np.arange(nb) % cur
+    return jax.tree_util.tree_map(lambda x: x[idx], batches)
+
+
+def stack_device_batches(dataset, indices) -> Tuple[dict, jnp.ndarray]:
+    """Stack the selected devices' batch stacks along a leading device axis.
+
+    Returns ``(stacked, valid)`` where ``stacked`` leaves have shape
+    ``(K, nb_max, batch, ...)`` and ``valid`` is a float32 ``(K, nb_max)``
+    mask: 1 for the device's own (bucketed) batches, 0 for batches that
+    only exist to reach the common ``nb_max``.  Masked batches must be
+    no-ops in the engine (zero gradient weight, identity SGD step), which
+    preserves exact numerical parity with the per-device looped path.
+    """
+    getter = getattr(dataset, "device_batches_padded", None)
+    devs = [dataset.device_batches(int(k)) for k in indices]
+    nbs = [num_batches_of(d) for d in devs]
+    nb_max = max(nbs)
+    if getter is not None:
+        padded = [getter(int(k), nb_max) for k in indices]
+    else:
+        padded = [pad_batch_stack(d, nb_max) for d in devs]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    valid = jnp.asarray(
+        np.arange(nb_max)[None, :] < np.asarray(nbs)[:, None], jnp.float32)
+    return stacked, valid
+
+
 class FederatedData:
     """The dataset protocol consumed by ``FederatedTrainer``."""
 
@@ -50,9 +103,31 @@ class FederatedData:
         self._batches = [pad_to_batches(d, batch_size, bucket)
                          for d in device_data]
         self._eval_limit = eval_batch_limit
+        self._pad_cache: Dict[int, dict] = {}
 
     def device_batches(self, k: int):
         return self._batches[k]
+
+    def device_batches_padded(self, k: int, nb: int):
+        """``device_batches(k)`` cycled out to ``nb >= num_batches``.
+
+        Only the largest padding seen so far is cached per device: cycling
+        makes any shorter padding an exact prefix of a longer one
+        (``arange(n1) % cur == (arange(n2) % cur)[:n1]``), so smaller
+        requests slice the cached stack instead of storing another copy.
+        """
+        own = num_batches_of(self._batches[k])
+        if nb < own:
+            raise ValueError(
+                f"device_batches_padded: nb={nb} < device {k}'s "
+                f"{own} batches would silently drop data")
+        cached = self._pad_cache.get(k)
+        if cached is None or num_batches_of(cached) < nb:
+            cached = pad_batch_stack(self._batches[k], nb)
+            self._pad_cache[k] = cached
+        if num_batches_of(cached) == nb:
+            return cached
+        return jax.tree_util.tree_map(lambda x: x[:nb], cached)
 
     def eval_batches(self) -> Iterable[Tuple[float, dict]]:
         for k in range(self.num_devices):

@@ -59,6 +59,27 @@ def dane_update(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
         w_tree, grad_tree, corr_tree, anchor_tree)
 
 
+def dane_update_masked(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
+                       valid, interpret: bool | None = None):
+    """Fused FedDANE step over *device-stacked* pytrees with a step mask.
+
+    Leaves carry a leading device axis K; ``valid`` is a ``(K,)`` 0/1
+    vector.  Devices with ``valid == 0`` take an identity step (used by
+    the batched round engine to make stacking-pad batches no-ops).  The
+    kernel itself runs unmasked over the flattened (K * rows, LANES)
+    view — one launch per leaf for all devices — and the select is a
+    single cheap elementwise op on top.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    new = dane_update(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
+                      interpret=interpret)
+    def select(n, o):
+        keep = valid.reshape(valid.shape + (1,) * (n.ndim - 1)) > 0
+        return jnp.where(keep, n, o)
+    return jax.tree_util.tree_map(select, new, w_tree)
+
+
 # ---------------------------------------------------------------------------
 # flash attention with GQA layout handling
 # ---------------------------------------------------------------------------

@@ -1,0 +1,163 @@
+"""Batched round engine vs the looped reference (core/engine.py).
+
+The batched engine must be a pure performance transformation: for every
+algorithm, a fixed seed must yield the same device selections and — to
+float-accumulation order — the same trajectory as the per-device looped
+path.  These tests pin that contract at atol 1e-5.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig
+from repro.core import (FederatedTrainer, make_batched_grad_fn,
+                        make_batched_solver, make_grad_fn,
+                        make_local_solver)
+from repro.core import pytree as pt
+from repro.data import make_synthetic
+from repro.data.batching import stack_device_batches
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
+         "feddane_pipelined", "feddane_decayed", "scaffold"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=8, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _leaves_allclose(a, b, atol):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_engine_parity_per_algorithm(setup, algo):
+    """3 rounds, partial participation, heterogeneous device sizes (so
+    the batched stack actually pads/masks): trajectories must coincide."""
+    ds, params = setup
+    kw = dict(algorithm=algo, num_devices=8, devices_per_round=4,
+              local_epochs=2, learning_rate=0.05, mu=0.01, seed=7,
+              correction_decay=0.9)
+    states = {}
+    for engine in ("loop", "batched"):
+        tr = FederatedTrainer(logreg_loss, ds,
+                              FederatedConfig(engine=engine, **kw))
+        st = tr.init(params)
+        for _ in range(3):
+            st = tr.round(st)
+        states[engine] = st
+    lo, ba = states["loop"], states["batched"]
+    _leaves_allclose(lo.params, ba.params, atol=1e-5)
+    assert lo.comm_rounds == ba.comm_rounds
+    if algo == "feddane_pipelined":
+        _leaves_allclose(lo.g_prev, ba.g_prev, atol=1e-5)
+    if algo == "scaffold":
+        _leaves_allclose(lo.c_server, ba.c_server, atol=1e-5)
+        for ck_l, ck_b in zip(lo.controls, ba.controls):
+            _leaves_allclose(ck_l, ck_b, atol=1e-5)
+
+
+def test_batched_solver_matches_scalar_solver(setup):
+    """vmapped solver + fused kernel == scalar solver per device, even
+    when devices need mask-padding to the common stacked length."""
+    ds, params = setup
+    S = np.array([0, 3, 5])
+    batches, valid = stack_device_batches(ds, S)
+    rng = jax.random.PRNGKey(1)
+    corr = jax.tree_util.tree_map(
+        lambda x: 0.01 * jax.random.normal(rng, (len(S),) + x.shape,
+                                           x.dtype), params)
+    mu = 0.1
+    batched = make_batched_solver(logreg_loss, learning_rate=0.05,
+                                  num_epochs=3)
+    res = batched(params, corr, mu, batches, valid)
+    scalar = make_local_solver(logreg_loss, learning_rate=0.05,
+                               num_epochs=3)
+    for i, k in enumerate(S):
+        corr_k = jax.tree_util.tree_map(lambda x, i=i: x[i], corr)
+        ref = scalar(params, corr_k, mu, ds.device_batches(int(k)))
+        got = jax.tree_util.tree_map(lambda x, i=i: x[i], res.params)
+        _leaves_allclose(got, ref.params, atol=1e-5)
+        assert int(res.num_steps[i]) == int(ref.num_steps)
+
+
+def test_batched_grad_matches_scalar_grad(setup):
+    ds, params = setup
+    S = np.array([1, 2, 6, 7])
+    batches, valid = stack_device_batches(ds, S)
+    g = make_batched_grad_fn(logreg_loss)(params, batches, valid)
+    scalar = make_grad_fn(logreg_loss)
+    for i, k in enumerate(S):
+        ref = scalar(params, ds.device_batches(int(k)))
+        got = jax.tree_util.tree_map(lambda x, i=i: x[i], g)
+        _leaves_allclose(got, ref, atol=1e-6)
+
+
+def test_stack_device_batches_shapes_and_mask(setup):
+    ds, _ = setup
+    S = np.array([0, 1, 2, 3])
+    batches, valid = stack_device_batches(ds, S)
+    nbs = [jax.tree_util.tree_leaves(ds.device_batches(int(k)))[0].shape[0]
+           for k in S]
+    nb_max = max(nbs)
+    for leaf in jax.tree_util.tree_leaves(batches):
+        assert leaf.shape[0] == len(S) and leaf.shape[1] == nb_max
+    assert valid.shape == (len(S), nb_max)
+    np.testing.assert_array_equal(np.asarray(valid.sum(axis=1), int), nbs)
+    # padded slots cycle the device's own batches (finite, real data)
+    k0 = int(S[int(np.argmin(nbs))])
+    if min(nbs) < nb_max:
+        i = int(np.argmin(nbs))
+        own = ds.device_batches(k0)
+        np.testing.assert_array_equal(
+            np.asarray(batches["x"][i, min(nbs)]), np.asarray(own["x"][0]))
+
+
+def test_engine_rejects_unknown(setup):
+    ds, params = setup
+    with pytest.raises(ValueError):
+        FederatedTrainer(logreg_loss, ds,
+                         FederatedConfig(engine="warp-drive"))
+
+
+def test_scaffold_with_replacement_routes_to_loop(setup):
+    """Duplicated selections must update a device's control twice,
+    sequentially — the batched scatter cannot express that, so the
+    trainer reroutes scaffold + sample_with_replacement to the looped
+    path: both engines must be EXACTLY identical (same code ran)."""
+    ds, params = setup
+    kw = dict(algorithm="scaffold", num_devices=8, devices_per_round=6,
+              local_epochs=1, learning_rate=0.05,
+              sample_with_replacement=True, seed=3)
+    states = {}
+    for engine in ("loop", "batched"):
+        tr = FederatedTrainer(logreg_loss, ds,
+                              FederatedConfig(engine=engine, **kw))
+        st = tr.init(params)
+        for _ in range(2):
+            st = tr.round(st)
+        states[engine] = st
+    for a, b in zip(jax.tree_util.tree_leaves(states["loop"].params),
+                    jax.tree_util.tree_leaves(states["batched"].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ck_l, ck_b in zip(states["loop"].controls,
+                          states["batched"].controls):
+        _leaves_allclose(ck_l, ck_b, atol=0)
+
+
+def test_padded_cache_prefix_consistency(setup):
+    """device_batches_padded(k, small) must equal the prefix of
+    device_batches_padded(k, large) — the cache slices, never re-pads."""
+    ds, _ = setup
+    big = ds.device_batches_padded(0, 64)
+    small = ds.device_batches_padded(0, 16)
+    for a, b in zip(jax.tree_util.tree_leaves(small),
+                    jax.tree_util.tree_leaves(big)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:16]))

@@ -23,11 +23,11 @@ def test_end_to_end_feddane_learns_on_iid():
                           learning_rate=0.05, mu=0.001, seed=2)
     tr = FederatedTrainer(logreg_loss, ds, cfg)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
-    hist = tr.run(params, num_rounds=12, eval_every=12)
+    hist, final_params = tr.run(params, num_rounds=12, eval_every=12)
     assert hist["loss"][-1] < 0.9 * hist["loss"][0], hist["loss"]
     # accuracy sanity
     acc = float(np.mean([float(logreg_accuracy(
-        hist["params"], {k: v[0] for k, v in ds.device_batches(i).items()}))
+        final_params, {k: v[0] for k, v in ds.device_batches(i).items()}))
         for i in range(5)]))
     assert acc > 0.35  # well above 10-class chance after 12 short rounds
 
@@ -43,7 +43,7 @@ def test_end_to_end_paper_headline():
                               devices_per_round=10, local_epochs=5,
                               learning_rate=0.01, mu=mu, seed=1)
         tr = FederatedTrainer(logreg_loss, ds, cfg)
-        hist = tr.run(params, num_rounds=8, eval_every=8)
+        hist, _ = tr.run(params, num_rounds=8, eval_every=8)
         finals[algo] = hist["loss"][-1]
     assert finals["feddane"] > finals["fedavg"], finals
 
