@@ -5,11 +5,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import pytree as pt
-from repro.kernels.ref import dane_update_ref, flash_attention_ref
+from repro.kernels.ref import dane_update_ref
 
 
 def bench(fn, *args, iters=20):

@@ -1,10 +1,21 @@
-"""Round-engine A/B: looped vs batched round latency (the tentpole metric).
+"""Round-engine A/B: looped vs batched round latency (the tentpole metric),
+plus the multi-round driver A/B: Python loop vs scan-fused driver.
 
 Times one full simulation round (feddane and fedavg) on the fig-1
 synthetic(1,1) logreg workload (E=5, batch 10, weighted sampling — the
 fig1_convergence configuration) for K in {5, 10, 30} selected devices
 under both engines with identical sampling seeds, and reports the
 speedup of the batched engine over the per-device looped path.
+
+The driver comparison (``round_driver_*`` rows) times a full
+``FederatedTrainer.run`` of several rounds at K in {5, 10}: the Python
+driver (host loop, host sampling, blocking eval per cadence point) vs
+the scanned driver (all rounds in one ``lax.scan`` dispatch, on-device
+sampling, eval inside the scan).  The scanned driver necessarily runs on
+the batched vmapped solver, so on CPU it inherits the batched engine's
+lockstep-padding pessimization described below — the dispatch savings it
+measures are real, but the win regime is accelerators/dispatch-bound
+configs, same as the per-round engine.
 
 Interpreting the numbers
 ------------------------
@@ -38,6 +49,8 @@ from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
 
 K_SWEEP = (5, 10, 30)
+DRIVER_K_SWEEP = (5, 10)
+DRIVER_ROUNDS = 10
 WARMUP = 5
 
 
@@ -68,6 +81,64 @@ def time_rounds(algo: str, engine: str, dataset, params, k: int,
     return float(np.median(times))
 
 
+def time_driver(algo: str, driver: str, dataset, params, k: int,
+                num_rounds: int) -> float:
+    """Wall seconds per round for a full ``run()`` under ``driver``.
+
+    The whole run is timed (sampling + rounds + eval at both endpoints) —
+    this is the multi-round dispatch cost the scanned driver exists to
+    remove.  The host sampler's rng is re-seeded between the warmup and
+    the timed run so the timed run replays the warmup's exact selection
+    sequence: every shape bucket it touches was compiled during warmup,
+    keeping one-off XLA compiles out of the single timed window (the
+    scanned driver re-seeds implicitly — its key starts from cfg.seed
+    each run).  The per-round engine is left on "auto" so each driver
+    gets its backend-best round implementation where it has a choice.
+    """
+    cfg = FederatedConfig(
+        algorithm=algo, num_devices=dataset.num_devices,
+        devices_per_round=k, local_epochs=5, local_batch_size=10,
+        learning_rate=0.01, mu=0.001, seed=1, round_driver=driver,
+        chunk_rounds=num_rounds)
+    tr = FederatedTrainer(logreg_loss, dataset, cfg)
+    _, warm = tr.run(params, num_rounds, eval_every=num_rounds)
+    jax.block_until_ready(warm)
+    tr.rng = np.random.default_rng(cfg.seed)   # replay warmup selections
+    t0 = time.time()
+    _, final = tr.run(params, num_rounds, eval_every=num_rounds)
+    jax.block_until_ready(final)
+    return (time.time() - t0) / num_rounds
+
+
+def smoke():
+    """Tiny end-to-end run of BOTH drivers for CI's bench-smoke job.
+
+    Asserts each driver completes the run with a finite loss history and
+    returns one row per driver for the JSON artifact.  Small enough for
+    a CPU-only runner (8 devices, K=4, E=1, 3 rounds)."""
+    import numpy as np
+
+    dataset = make_synthetic(1, 1, num_devices=8, seed=0)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    rows = []
+    for driver in ("python", "scan"):
+        cfg = FederatedConfig(
+            algorithm="feddane", num_devices=8, devices_per_round=4,
+            local_epochs=1, local_batch_size=10, learning_rate=0.01,
+            mu=0.001, seed=1, round_driver=driver, chunk_rounds=3)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, 3, eval_every=1)
+        jax.block_until_ready(final)
+        wall = time.time() - t0
+        assert len(hist["loss"]) == 3, f"{driver}: truncated history"
+        assert np.isfinite(hist["loss"]).all(), f"{driver}: non-finite loss"
+        rows.append({"name": f"bench_smoke_{driver}", "wall_s": wall,
+                     "rounds": 3, "backend": jax.default_backend(),
+                     "final_loss": float(hist["loss"][-1])})
+    return rows
+
+
 def main():
     dataset = make_synthetic(1, 1, num_devices=30, seed=0)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
@@ -83,6 +154,17 @@ def main():
                  f"{loop_s * 1e3:.1f} ms/round backend={backend}")
             emit(f"round_engine_{algo}_K{k}_batched", batch_s,
                  f"{batch_s * 1e3:.1f} ms/round speedup={speedup:.2f}x")
+    num_rounds = rounds(DRIVER_ROUNDS)
+    for k in DRIVER_K_SWEEP:
+        py_s = time_driver("feddane", "python", dataset, params, k,
+                           num_rounds)
+        sc_s = time_driver("feddane", "scan", dataset, params, k,
+                           num_rounds)
+        speedup = py_s / max(sc_s, 1e-12)
+        emit(f"round_driver_feddane_K{k}_python", py_s,
+             f"{py_s * 1e3:.1f} ms/round x{num_rounds}r backend={backend}")
+        emit(f"round_driver_feddane_K{k}_scan", sc_s,
+             f"{sc_s * 1e3:.1f} ms/round speedup={speedup:.2f}x")
 
 
 if __name__ == "__main__":

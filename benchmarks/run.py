@@ -3,13 +3,43 @@ roofline.  Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,...]
   BENCH_SCALE=0.3 PYTHONPATH=src python -m benchmarks.run   # faster
+  PYTHONPATH=src python -m benchmarks.run --smoke [--out bench_smoke.json]
+
+``--smoke`` is the CI perf-path canary: a tiny multi-round run of both
+round drivers (python + scan) that must complete with finite losses.  It
+prints one timing line and writes a JSON artifact, so a regression on
+the benchmark path breaks CI instead of lurking until the next full
+benchmark run.
 """
+import json
 import os
 import sys
 import time
 
 
+def smoke(out_path: str) -> None:
+    from benchmarks import round_engine
+    t0 = time.time()
+    rows = round_engine.smoke()
+    wall = time.time() - t0
+    assert rows, "smoke benchmark produced no rows"
+    with open(out_path, "w") as f:
+        json.dump({"total_wall_s": wall, "rows": rows}, f, indent=2)
+    drivers = "+".join(r["name"].replace("bench_smoke_", "")
+                       for r in rows)
+    print(f"bench_smoke,{wall * 1e6:.0f},"
+          f"drivers={drivers} rounds={rows[0]['rounds']} "
+          f"backend={rows[0]['backend']} out={out_path} ok")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv:
+        out = "bench_smoke.json"
+        if "--out" in sys.argv:
+            out = sys.argv[sys.argv.index("--out") + 1]
+        smoke(out)
+        return
+
     only = None
     if "--only" in sys.argv:
         only = set(sys.argv[sys.argv.index("--only") + 1].split(","))

@@ -7,7 +7,7 @@ arguments) and trivially serializable.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -179,3 +179,18 @@ class FederatedConfig:
     #               batching pessimizes CPU rounds — see
     #               benchmarks/round_engine.py)
     engine: str = "auto"
+    # multi-round driver (core/engine.py ScannedDriver):
+    #   "scan"   — chunk_rounds rounds fused into ONE jax.lax.scan program:
+    #              on-device jax.random sampling, index-gathered pre-stacked
+    #              device tensors, eval inside the scan at eval_every cadence
+    #   "python" — host loop over trainer.round() (reference; required for
+    #              scaffold + sample_with_replacement)
+    #   "auto"   — "scan" wherever ``engine`` resolved to "batched"
+    #              (accelerators by default), else "python": the scanned
+    #              body is built on the batched vmapped solver, so an
+    #              explicit engine="loop" keeps the host loop unless
+    #              "scan" is also explicit
+    round_driver: str = "auto"
+    # rounds fused per scanned-driver dispatch; checkpoints / verbose
+    # printing happen at chunk boundaries (0 -> one chunk per run)
+    chunk_rounds: int = 32

@@ -31,11 +31,24 @@ Every algorithm runs on one of two interchangeable engines, selected by
 Sampling happens identically (same rng stream) under both engines, so a
 fixed seed yields the same device selections and — to float-accumulation
 order — the same trajectory.
+
+Orthogonally to the per-round engine, ``FederatedConfig.round_driver``
+selects how ``run()`` drives the *round loop*:
+
+- ``"scan"``: the scan-fused multi-round driver (engine.ScannedDriver) —
+  chunk_rounds rounds per dispatch, on-device jax.random sampling,
+  eval inside the scan.  Its sampling bit stream differs from the host
+  sampler's (see server.py): same distribution, each driver individually
+  seed-reproducible, cross-driver selections NOT identical.
+- ``"python"``: this module's host loop over ``round()`` — the reference
+  driver, and the only one supporting scaffold+sample_with_replacement.
+- ``"auto"``: scan wherever ``engine`` resolved to batched (accelerators
+  by default), python otherwise — so an explicit ``engine="loop"`` keeps
+  the authoritative host loop unless ``"scan"`` is also explicit.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -44,9 +57,8 @@ import numpy as np
 from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
-from repro.core.client import (LocalResult, gamma_inexactness, make_grad_fn,
-                               make_local_solver)
-from repro.core.engine import RoundEngine
+from repro.core.client import make_grad_fn, make_local_solver
+from repro.core.engine import RoundEngine, ScannedDriver
 from repro.data.batching import num_batches_of, stack_device_batches
 
 TWO_ROUND_ALGOS = {"feddane", "inexact_dane"}
@@ -90,15 +102,37 @@ class FederatedTrainer:
             self.engine = None
         else:
             raise ValueError(f"unknown engine {cfg.engine!r}")
+        if cfg.round_driver not in ("python", "scan", "auto"):
+            raise ValueError(f"unknown round_driver {cfg.round_driver!r}")
+        self._scanned: Optional[ScannedDriver] = None   # built lazily
+        self._sample_queue: List[np.ndarray] = []       # test injection
         self._eval_loss = _make_eval_loss(loss_fn)
 
     # -- helpers ----------------------------------------------------------
 
     def _sample(self) -> np.ndarray:
+        if self._sample_queue:
+            return np.asarray(self._sample_queue.pop(0), dtype=np.int64)
         p = self.dataset.weights if self.cfg.weighted_sampling else None
         return server.sample_devices(
             self.rng, self.dataset.num_devices, self.cfg.devices_per_round,
             p=p, replace=self.cfg.sample_with_replacement)
+
+    def _resolve_driver(self) -> str:
+        driver = self.cfg.round_driver
+        if driver == "auto":
+            # Scan only where the batched engine was selected: the scanned
+            # body runs on the vmapped solver, so an explicit
+            # engine="loop" (the authoritative reference) must keep the
+            # host loop unless the user also explicitly asks for "scan".
+            driver = "scan" if self.engine is not None else "python"
+        if (driver == "scan" and self.cfg.algorithm == "scaffold"
+                and self.cfg.sample_with_replacement):
+            # Duplicated selections need sequential control updates; the
+            # scanned scatter (like the batched engine's) applies them
+            # once — fall back to the authoritative host loop.
+            driver = "python"
+        return driver
 
     def _batches(self, k: int):
         return self.dataset.device_batches(int(k))
@@ -252,22 +286,71 @@ class FederatedTrainer:
         return b_dissimilarity(grads, self.dataset.weights)
 
     def run(self, params, num_rounds: int, eval_every: int = 1,
-            verbose: bool = False) -> Tuple[Dict[str, List[float]], Any]:
+            verbose: bool = False, checkpoint_dir: Optional[str] = None,
+            selections=None) -> Tuple[Dict[str, List[float]], Any]:
         """Run ``num_rounds`` rounds; returns ``(history, final_params)``.
-        ``history`` holds only float lists (round / comm_rounds / loss)."""
+        ``history`` holds only float lists (round / comm_rounds / loss).
+
+        ``checkpoint_dir``: if set, ``{"params", "round"}`` is saved via
+        checkpoint/store.py at every ``cfg.chunk_rounds`` boundary (both
+        drivers, so switching drivers keeps the save cadence).
+        ``selections``: optional ``(num_rounds, 2, K)`` (or
+        ``(num_rounds, K)``) int array that overrides device sampling
+        round by round — row 0 feeds single-selection algorithms and
+        FedDANE phase A, row 1 FedDANE phase B.  Used by parity tests to
+        make the two drivers' sampling comparable.
+        """
+        if self._resolve_driver() == "scan":
+            if self._scanned is None:
+                self._scanned = ScannedDriver(
+                    self.loss_fn, self.dataset, self.cfg,
+                    engine=self.engine)
+            return self._scanned.run(
+                params, num_rounds, eval_every=eval_every, verbose=verbose,
+                checkpoint_dir=checkpoint_dir, selections=selections)
+
+        if selections is not None:
+            sel = np.asarray(selections)
+            if sel.shape[0] < num_rounds:
+                raise ValueError(
+                    f"selections covers {sel.shape[0]} rounds "
+                    f"< num_rounds={num_rounds}")
+            two_phase = self.cfg.algorithm in ("feddane", "feddane_decayed")
+            for t in range(num_rounds):
+                row = sel[t]
+                phases = [row] if row.ndim == 1 else list(row)
+                self._sample_queue.append(phases[0])
+                if two_phase:
+                    self._sample_queue.append(
+                        phases[1] if len(phases) > 1 else phases[0])
+
+        chunk = self.cfg.chunk_rounds if self.cfg.chunk_rounds > 0 \
+            else num_rounds
         st = self.init(params)
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
                                         "loss": []}
-        for t in range(num_rounds):
-            st = self.round(st)
-            if t % eval_every == 0 or t == num_rounds - 1:
-                loss = self.global_loss(st.params)
-                hist["round"].append(st.round)
-                hist["comm_rounds"].append(st.comm_rounds)
-                hist["loss"].append(loss)
-                if verbose:
-                    print(f"[{self.cfg.algorithm}] round {st.round:4d} "
-                          f"comm {st.comm_rounds:4d} loss {loss:.4f}")
+        try:
+            for t in range(num_rounds):
+                st = self.round(st)
+                if t % eval_every == 0 or t == num_rounds - 1:
+                    loss = self.global_loss(st.params)
+                    hist["round"].append(st.round)
+                    hist["comm_rounds"].append(st.comm_rounds)
+                    hist["loss"].append(loss)
+                    if verbose:
+                        print(f"[{self.cfg.algorithm}] round {st.round:4d} "
+                              f"comm {st.comm_rounds:4d} loss {loss:.4f}")
+                if checkpoint_dir is not None and (
+                        (t + 1) % chunk == 0 or t == num_rounds - 1):
+                    from repro.checkpoint.store import save_checkpoint
+                    save_checkpoint(checkpoint_dir,
+                                    {"params": st.params,
+                                     "round": st.round},
+                                    step=st.round)
+        finally:
+            # even on mid-run failure: stale injected selections must
+            # never leak into a later run()'s sampling
+            self._sample_queue.clear()
         return hist, st.params
 
 

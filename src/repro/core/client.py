@@ -25,8 +25,7 @@ keeps exact parity with running the scalar solver per device.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -40,18 +40,58 @@ looped path even when ``engine="batched"``.
 Round-function signatures take scalars (mu, decay, ...) as traced
 arguments, so one compiled executable serves the paper's whole
 (mu, participation) tuning grid at a given stacked shape.
+
+Scanned multi-round driver
+--------------------------
+``ScannedDriver`` (``make_scanned_run``) is the layer above: it fuses
+``chunk_rounds`` whole federated rounds into ONE ``jax.lax.scan``
+program, removing the O(num_rounds) per-round dispatches and host
+round-trips that remain when ``FederatedTrainer.run`` drives the jitted
+round functions from Python.  Its execution model:
+
+- **On-device sampling**: device selection moves from host numpy to
+  ``jax.random`` (``server.sample_devices_onchip``; Gumbel top-k for
+  weighted sampling without replacement), keyed off a PRNG key threaded
+  through the scan carry.  The selection gathers rows of the
+  *pre-stacked all-device* batch tensors (every device padded to the
+  dataset-wide bucketed ``nb_max``), so shapes stay fixed across rounds
+  and the whole run compiles once per chunk length.  Host and device
+  samplers draw from the same distribution but different bit streams:
+  cross-driver selection identity is NOT a contract (see server.py);
+  per-driver seed reproducibility is.
+- **On-device history**: the loss curve is accumulated as scan outputs.
+  Global loss is evaluated *inside* the scan at ``eval_every`` cadence
+  via ``lax.cond`` over the all-device stacked eval tensors
+  (``data.batching.stack_eval_batches``); skipped rounds emit NaN that
+  the host filters at chunk boundaries.  Accumulation runs in jnp
+  float32 on device rather than host Python floats, so eval parity with
+  the Python driver holds to float-accumulation order (pinned at
+  atol 1e-5), not bit-exactly.
+- **Chunked execution**: ``run()`` dispatches the scan in
+  ``chunk_rounds``-sized chunks; checkpoint saves (checkpoint/store.py)
+  and verbose printing interleave at chunk boundaries — the only points
+  where state returns to host.
+
+Semantic caveats: SCAFFOLD + ``sample_with_replacement`` stays on the
+Python driver (duplicated selections must update a device's control
+twice, sequentially — same restriction as the batched engine, but here
+the whole driver falls back); ``feddane_decayed``'s ``decay^t`` is
+computed from the traced round index, and per-round ``comm_rounds`` is
+reconstructed host-side (it is a deterministic ``2t`` / ``t`` ramp).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_batched_grad_fn, make_batched_solver
+from repro.data.batching import stack_device_batches, stack_eval_batches
 
 
 def _donate_argnums(nums: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -164,3 +204,213 @@ class RoundEngine:
             lambda cs, d: cs + d * (k / num_devices), c_server, delta)
         return (server.aggregate_stacked(res.params),
                 c_server_new, controls_new)
+
+
+def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
+                       eval_weights) -> Callable:
+    """On-device global loss over the all-device stacked eval tensors.
+
+    Mirrors ``FederatedTrainer.global_loss`` exactly: per device the mean
+    batch loss over its *valid* (own) batches, then the p_k-weighted mean
+    over devices — but as one traced expression usable inside the scanned
+    driver's ``lax.cond``."""
+
+    def eval_loss(p):
+        def per_device(b, v):
+            def accum(acc, xs):
+                batch, vi = xs
+                return acc + loss_fn(p, batch) * vi, None
+            s, _ = jax.lax.scan(accum, jnp.float32(0.0), (b, v))
+            return s / jnp.maximum(v.sum(), 1.0)
+
+        losses = jax.vmap(per_device)(eval_batches, eval_valid)
+        return ((eval_weights * losses).sum()
+                / jnp.maximum(eval_weights.sum(), 1e-12))
+
+    return eval_loss
+
+
+_TWO_ROUND = ("feddane", "inexact_dane", "feddane_decayed")
+
+
+class ScannedDriver:
+    """Scan-fused multi-round driver (see module docstring).
+
+    One instance per (loss_fn, dataset, cfg); it pre-stacks ALL devices'
+    train and eval batch tensors once, builds two jitted chunk programs
+    (internally-sampled and injected-selection), and exposes ``run`` with
+    the same ``(history, final_params)`` contract as
+    ``FederatedTrainer.run``.
+    """
+
+    def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
+                 engine: Optional[RoundEngine] = None):
+        if cfg.algorithm == "scaffold" and cfg.sample_with_replacement:
+            raise ValueError(
+                "scaffold + sample_with_replacement requires sequential "
+                "per-duplicate control updates; use the python driver")
+        self.cfg = cfg
+        self.dataset = dataset
+        self.engine = engine if engine is not None else RoundEngine(
+            loss_fn, cfg)
+        self.num_devices = dataset.num_devices
+        self.batches_all, self.valid_all = stack_device_batches(
+            dataset, np.arange(self.num_devices))
+        eb, ev, ew = stack_eval_batches(dataset)
+        self._eval_loss = _make_stacked_eval(loss_fn, eb, ev, ew)
+        self.probs = (jnp.asarray(dataset.weights, jnp.float32)
+                      if cfg.weighted_sampling else None)
+        self.comm_per_round = 2 if cfg.algorithm in _TWO_ROUND else 1
+        # jit is lazy: each traces once per distinct chunk length.
+        self._chunk_sampled = jax.jit(self._make_chunk(inject=False))
+        self._chunk_injected = jax.jit(self._make_chunk(inject=True))
+
+    # -- scan program -----------------------------------------------------
+
+    def _make_chunk(self, inject: bool) -> Callable:
+        """Build ``chunk(carry, xs) -> (carry, losses)``: a lax.scan whose
+        body is one whole federated round.  ``inject=True`` reads each
+        round's selection from ``xs["sel"]`` (tests / A-B comparisons);
+        ``inject=False`` samples on device from the carried PRNG key."""
+        cfg, eng = self.cfg, self.engine
+        algo = cfg.algorithm
+        n = self.num_devices
+        k_sel = (cfg.devices_per_round if cfg.sample_with_replacement
+                 else min(cfg.devices_per_round, n))
+        batches_all, valid_all = self.batches_all, self.valid_all
+        probs, mu = self.probs, cfg.mu
+        tmap = jax.tree_util.tree_map
+
+        def sample(key):
+            return server.sample_devices_onchip(
+                key, n, k_sel, p=probs,
+                replace=cfg.sample_with_replacement)
+
+        def gather(sel):
+            return tmap(lambda x: x[sel], batches_all), valid_all[sel]
+
+        def body(carry, xs):
+            new = dict(carry)
+            if inject:
+                s1, s2 = xs["sel"][0], xs["sel"][1]
+            else:
+                new["key"], key1, key2 = jax.random.split(carry["key"], 3)
+                s1, s2 = sample(key1), sample(key2)
+            params = carry["params"]
+
+            if algo in ("fedavg", "fedprox"):
+                b, v = gather(s1)
+                params = eng._avg_round(
+                    params, b, v, 0.0 if algo == "fedavg" else mu)
+            elif algo == "inexact_dane":
+                params = eng._dane_shared_round(
+                    params, batches_all, valid_all, mu, 1.0)
+            elif algo in ("feddane", "feddane_decayed"):
+                decay = (jnp.float32(cfg.correction_decay)
+                         ** xs["t"].astype(jnp.float32)
+                         if algo == "feddane_decayed" else 1.0)
+                b1, v1 = gather(s1)
+                b2, v2 = gather(s2)
+                params = eng._dane_round(params, b1, v1, b2, v2, mu, decay)
+            elif algo == "feddane_pipelined":
+                b, v = gather(s1)
+                params, new["g_prev"] = eng._pipelined_round(
+                    params, carry["g_prev"], b, v, mu)
+            elif algo == "scaffold":
+                b, v = gather(s1)
+                c_k = tmap(lambda x: x[s1], carry["controls"])
+                params, new["c_server"], c_new = eng._scaffold_round(
+                    params, carry["c_server"], c_k, b, v, jnp.float32(n))
+                new["controls"] = tmap(lambda c, cn: c.at[s1].set(cn),
+                                       carry["controls"], c_new)
+            else:
+                raise ValueError(f"unknown algorithm {algo!r}")
+
+            new["params"] = params
+            loss = jax.lax.cond(
+                xs["do_eval"], self._eval_loss,
+                lambda p: jnp.float32(jnp.nan), params)
+            return new, loss
+
+        def chunk(carry, xs):
+            return jax.lax.scan(body, carry, xs)
+
+        return chunk
+
+    # -- host-side chunked run --------------------------------------------
+
+    def _init_carry(self, params) -> Dict[str, Any]:
+        carry = {"params": params,
+                 "key": jax.random.PRNGKey(self.cfg.seed)}
+        if self.cfg.algorithm == "feddane_pipelined":
+            carry["g_prev"] = pt.zeros_like(params)
+        if self.cfg.algorithm == "scaffold":
+            carry["c_server"] = pt.zeros_like(params)
+            carry["controls"] = _stack_zeros(params, self.num_devices)
+        return carry
+
+    def run(self, params, num_rounds: int, eval_every: int = 1,
+            verbose: bool = False, checkpoint_dir: Optional[str] = None,
+            selections=None) -> Tuple[Dict[str, List[float]], Any]:
+        """Chunked scanned run; same contract as ``FederatedTrainer.run``.
+
+        ``selections``: optional int array ``(num_rounds, 2, K)`` (or
+        ``(num_rounds, K)``, broadcast to both phases) overriding the
+        on-device sampler — used to make the two drivers' sampling
+        comparable in parity tests.
+        """
+        cfg = self.cfg
+        sel = None
+        if selections is not None:
+            sel = jnp.asarray(np.asarray(selections), jnp.int32)
+            if sel.ndim == 2:
+                sel = jnp.stack([sel, sel], axis=1)
+            if sel.shape[0] < num_rounds:
+                raise ValueError(
+                    f"selections covers {sel.shape[0]} rounds "
+                    f"< num_rounds={num_rounds}")
+        chunk_rounds = cfg.chunk_rounds if cfg.chunk_rounds > 0 \
+            else num_rounds
+        t_all = np.arange(num_rounds)
+        eval_mask = (t_all % eval_every == 0) | (t_all == num_rounds - 1)
+        hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
+                                        "loss": []}
+        chunk_fn = (self._chunk_injected if sel is not None
+                    else self._chunk_sampled)
+        carry = self._init_carry(params)
+        for off in range(0, num_rounds, chunk_rounds):
+            hi = min(off + chunk_rounds, num_rounds)
+            xs = {"t": jnp.asarray(t_all[off:hi], jnp.int32),
+                  "do_eval": jnp.asarray(eval_mask[off:hi])}
+            if sel is not None:
+                xs["sel"] = sel[off:hi]
+            carry, losses = chunk_fn(carry, xs)
+            # chunk boundary: the only host round-trip
+            losses = np.asarray(jax.device_get(losses))
+            for i, t in enumerate(range(off, hi)):
+                if not eval_mask[t]:
+                    continue
+                hist["round"].append(t + 1)
+                hist["comm_rounds"].append((t + 1) * self.comm_per_round)
+                hist["loss"].append(float(losses[i]))
+                if verbose:
+                    print(f"[{cfg.algorithm}] round {t + 1:4d} "
+                          f"comm {(t + 1) * self.comm_per_round:4d} "
+                          f"loss {float(losses[i]):.4f}")
+            if checkpoint_dir is not None:
+                from repro.checkpoint.store import save_checkpoint
+                save_checkpoint(checkpoint_dir,
+                                {"params": carry["params"], "round": hi},
+                                step=hi)
+        return hist, carry["params"]
+
+
+def make_scanned_run(loss_fn: Callable, dataset, cfg: FederatedConfig,
+                     engine: Optional[RoundEngine] = None) -> ScannedDriver:
+    """Factory for the scan-fused multi-round driver.
+
+    Returns a :class:`ScannedDriver` whose ``run(params, num_rounds, ...)``
+    executes rounds as chunked ``lax.scan`` programs with on-device
+    sampling and in-scan eval.  ``engine`` lets a trainer share its
+    already-built :class:`RoundEngine` (and so its jit caches)."""
+    return ScannedDriver(loss_fn, dataset, cfg, engine=engine)

@@ -1,4 +1,25 @@
-"""Server side: device sampling and aggregation (Alg. 1/2 lines 3, 6-7, 9)."""
+"""Server side: device sampling and aggregation (Alg. 1/2 lines 3, 6-7, 9).
+
+Sampling determinism contract
+-----------------------------
+There are two samplers, one per round driver, and they deliberately do
+NOT produce the same selections for a given ``FederatedConfig.seed``:
+
+- ``sample_devices`` (host): numpy ``Generator.choice`` driven by the
+  trainer's ``np.random.default_rng(seed)`` stream — the Python driver.
+- ``sample_devices_onchip`` (device): ``jax.random`` keyed off a PRNG key
+  threaded through the scanned driver's ``lax.scan`` carry — selection
+  never leaves the accelerator.
+
+Both draw from the *same distribution* (per-device marginals p_k;
+without replacement the Gumbel-top-k construction is exactly numpy's
+sequential renormalized draw, i.e. Plackett–Luce), but the underlying
+bit streams differ, so cross-driver selection identity is NOT part of
+the contract and is not tested.  What IS guaranteed — and pinned by
+tests/test_scan_driver.py — is that each driver is individually
+reproducible: a fixed seed yields an identical selection sequence, and
+therefore an identical loss history, run after run.
+"""
 from __future__ import annotations
 
 from typing import List, Optional, Sequence
@@ -19,6 +40,34 @@ def sample_devices(rng: np.random.Generator, num_devices: int, k: int,
         probs = np.asarray(p, dtype=np.float64)
         probs = probs / probs.sum()
     return rng.choice(num_devices, size=k, replace=replace, p=probs)
+
+
+def sample_devices_onchip(key, num_devices: int, k: int, p=None,
+                          replace: bool = False):
+    """``sample_devices`` on device: traceable under jit/scan.
+
+    ``key`` is a ``jax.random`` PRNG key (may be traced); ``num_devices``,
+    ``k``, ``replace`` and the presence of ``p`` are trace-static.
+    Weighted sampling without replacement uses the Gumbel-top-k trick,
+    which realizes the same sequential-renormalization distribution numpy
+    implements (see module docstring for the cross-driver contract).
+    Returns an int32 ``(k,)`` index vector.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not replace:
+        k = min(k, num_devices)
+    if p is not None:
+        p = jnp.asarray(p, jnp.float32)
+        p = p / p.sum()
+    if replace:
+        return jax.random.choice(key, num_devices, (k,), replace=True, p=p)
+    if p is None:
+        return jax.random.choice(key, num_devices, (k,), replace=False)
+    gumbel = jax.random.gumbel(key, (num_devices,))
+    scores = gumbel + jnp.log(jnp.maximum(p, 1e-30))
+    return jax.lax.top_k(scores, k)[1]
 
 
 def aggregate_mean(updates: List) -> object:

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pytree as pt

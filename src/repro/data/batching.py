@@ -17,7 +17,7 @@ jitted round functions compile O(log max_batches) times.
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +86,31 @@ def stack_device_batches(dataset, indices) -> Tuple[dict, jnp.ndarray]:
     valid = jnp.asarray(
         np.arange(nb_max)[None, :] < np.asarray(nbs)[:, None], jnp.float32)
     return stacked, valid
+
+
+def stack_eval_batches(dataset) -> Tuple[dict, jnp.ndarray, jnp.ndarray]:
+    """Stack ALL devices' eval batches for the scanned driver's on-device
+    global-loss evaluation.
+
+    Consumes the same ``dataset.eval_batches()`` protocol the host-side
+    ``FederatedTrainer.global_loss`` iterates (so per-device eval limits
+    are honored identically) and returns ``(stacked, valid, weights)``:
+    leaves ``(N, nb_max, batch, ...)``, a float32 ``(N, nb_max)`` validity
+    mask, and the float32 ``(N,)`` aggregation weights p_k.  Per device,
+    the mean loss over its *valid* batches equals the host eval exactly;
+    padded slots cycle real batches and are masked out.
+    """
+    weights, stacks = [], []
+    for wk, batches in dataset.eval_batches():
+        weights.append(float(wk))
+        stacks.append(batches)
+    nbs = [num_batches_of(b) for b in stacks]
+    nb_max = max(nbs)
+    padded = [pad_batch_stack(b, nb_max) for b in stacks]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    valid = jnp.asarray(
+        np.arange(nb_max)[None, :] < np.asarray(nbs)[:, None], jnp.float32)
+    return stacked, valid, jnp.asarray(weights, jnp.float32)
 
 
 class FederatedData:

@@ -11,7 +11,7 @@ Sample counts follow the FedProx lognormal power law.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 

@@ -13,7 +13,6 @@ round (mu is swept in the paper's tuning grid).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -7,11 +7,9 @@ on TPU they compile to Mosaic.  Wrappers handle pytree flattening
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.dane_update import LANES, dane_update_2d
 from repro.kernels.flash_attention import flash_attention_3d

@@ -14,7 +14,6 @@ Options: --multi-pod (2x16x16 mesh), --algo feddane|fedavg|feddane_pipelined,
 """
 import argparse
 import json
-import re
 import sys
 import traceback
 from typing import Any, Dict

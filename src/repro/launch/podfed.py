@@ -16,8 +16,7 @@ bytes from the intra-pod TP/FSDP traffic.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import pytree as pt
-from repro.launch import sharding as sh
 from repro.launch import steps
 from repro.models import transformer
 from repro.models.param import ParamSpec, param_pspecs
@@ -77,7 +75,6 @@ def make_podfed_round_step(cfg: ModelConfig, mesh: Mesh, *,
         expand = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
         params = squeeze(state["params"])
         anchor = squeeze(state["anchor"])
-        g_t_in = squeeze(state["g_t"])
         batch = jax.tree_util.tree_map(lambda x: x.reshape(x.shape[1:]),
                                        batch)  # (steps, b, ...)
 

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.models import (decode_cache_specs, decode_step, init_params,
                           model_specs)
-from repro.models import transformer
 from repro.models.param import init_params as init_tree
 
 

@@ -9,11 +9,11 @@ Baseline policy (recorded as such in EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import InputShape
 from repro.models.param import ShardingRules
 
 

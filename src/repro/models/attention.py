@@ -16,8 +16,6 @@ GQA is computed via head-group einsums (no materialized KV repetition).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ Spec builders return the matching ParamSpec trees.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
 from repro.models.layers import swiglu_ffn, swiglu_ffn_specs

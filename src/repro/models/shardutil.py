@@ -12,7 +12,7 @@ None -> unconstrained.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -10,7 +10,6 @@ like the large architectures.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

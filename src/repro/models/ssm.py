@@ -12,7 +12,7 @@ SSM/hybrid archs run the long_500k shape natively.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,11 +3,10 @@ reduction relationships between the algorithms."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FederatedConfig
 from repro.core import (FederatedTrainer, b_dissimilarity, gamma_inexactness,
-                        make_exact_solver, make_grad_fn, make_local_solver)
+                        make_exact_solver, make_local_solver)
 from repro.core import pytree as pt
 from repro.data import make_synthetic
 from repro.data.batching import FederatedData

@@ -1,0 +1,133 @@
+"""data/batching.py edge cases: pad-cache policy and pow2 bucketing.
+
+The pad cache (``FederatedData.device_batches_padded``) stores ONE entry
+per device — the largest padding seen — because cycling makes any
+shorter padding an exact prefix of a longer one.  These tests pin that
+policy, the refusal to ever truncate device data, and the power-of-two
+bucket boundaries at the degenerate sizes 1, 2^k, 2^k + 1.
+"""
+import numpy as np
+import pytest
+
+from repro.data.batching import (FederatedData, _next_pow2, num_batches_of,
+                                 pad_batch_stack, pad_to_batches,
+                                 stack_eval_batches)
+
+
+def _device(n, feat=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(size=(n, feat)).astype(np.float32),
+            "y": np.arange(n, dtype=np.int32)}
+
+
+@pytest.fixture()
+def ds():
+    # batch_size 1 so num_batches == num_examples: sizes 1, 2^k, 2^k + 1
+    return FederatedData([_device(1), _device(16), _device(17)],
+                         batch_size=1)
+
+
+# -- pow2 bucket boundaries ------------------------------------------------
+
+def test_next_pow2_boundaries():
+    assert _next_pow2(1) == 1
+    for k in range(1, 8):
+        assert _next_pow2(2 ** k) == 2 ** k           # exact power: kept
+        assert _next_pow2(2 ** k + 1) == 2 ** (k + 1)  # +1: next bucket
+    for k in range(2, 8):
+        assert _next_pow2(2 ** k - 1) == 2 ** k
+
+
+def test_bucketed_batch_counts_at_boundaries(ds):
+    assert [num_batches_of(ds.device_batches(k)) for k in range(3)] \
+        == [1, 16, 32]
+
+
+def test_padding_cycles_own_examples(ds):
+    # device 2 has 17 examples bucketed to 32 single-example batches:
+    # slot i must hold example i % 17 (cycled, never zero-filled)
+    b = ds.device_batches(2)
+    raw = _device(17)
+    for i in range(32):
+        np.testing.assert_array_equal(np.asarray(b["x"][i, 0]),
+                                      raw["x"][i % 17])
+
+
+def test_single_example_device(ds):
+    b = ds.device_batches(0)
+    assert num_batches_of(b) == 1
+    assert b["x"].shape == (1, 1, 3)
+
+
+def test_pad_to_batches_unbucketed():
+    out = pad_to_batches(_device(17), batch_size=1, bucket=False)
+    assert num_batches_of(out) == 17
+
+
+# -- refusal to truncate ---------------------------------------------------
+
+def test_pad_batch_stack_refuses_to_truncate(ds):
+    with pytest.raises(ValueError, match="drop device data"):
+        pad_batch_stack(ds.device_batches(1), 8)
+
+
+def test_device_batches_padded_refuses_to_truncate(ds):
+    with pytest.raises(ValueError, match="drop data"):
+        ds.device_batches_padded(1, 8)
+
+
+# -- largest-padding reuse -------------------------------------------------
+
+def test_pad_cache_keeps_only_largest(ds):
+    big = ds.device_batches_padded(1, 64)
+    assert num_batches_of(big) == 64
+    assert num_batches_of(ds._pad_cache[1]) == 64
+    # smaller request: served as a prefix slice, cache NOT downgraded
+    small = ds.device_batches_padded(1, 32)
+    assert num_batches_of(small) == 32
+    assert num_batches_of(ds._pad_cache[1]) == 64
+    np.testing.assert_array_equal(np.asarray(small["x"]),
+                                  np.asarray(big["x"][:32]))
+    # larger request: cache upgraded in place, still one entry per device
+    bigger = ds.device_batches_padded(1, 128)
+    assert num_batches_of(ds._pad_cache[1]) == 128
+    assert len([k for k in ds._pad_cache if k == 1]) == 1
+    np.testing.assert_array_equal(np.asarray(bigger["x"][:64]),
+                                  np.asarray(big["x"]))
+
+
+def test_pad_cache_exact_size_returns_cached_object(ds):
+    a = ds.device_batches_padded(2, 64)
+    b = ds.device_batches_padded(2, 64)
+    assert a["x"] is b["x"]          # exact hit: no copy, no re-pad
+
+
+def test_own_size_request_is_identity(ds):
+    own = ds.device_batches(1)
+    got = ds.device_batches_padded(1, num_batches_of(own))
+    np.testing.assert_array_equal(np.asarray(got["x"]),
+                                  np.asarray(own["x"]))
+
+
+# -- eval stacking (scanned-driver input) ----------------------------------
+
+def test_stack_eval_batches_matches_protocol(ds):
+    stacked, valid, weights = stack_eval_batches(ds)
+    assert stacked["x"].shape[0] == 3 and valid.shape == (3, 32)
+    np.testing.assert_array_equal(np.asarray(valid.sum(axis=1), int),
+                                  [1, 16, 32])
+    np.testing.assert_allclose(np.asarray(weights),
+                               np.asarray(ds.weights, np.float32))
+    for i, (wk, b) in enumerate(ds.eval_batches()):
+        nb = num_batches_of(b)
+        np.testing.assert_array_equal(np.asarray(stacked["x"][i, :nb]),
+                                      np.asarray(b["x"]))
+
+
+def test_stack_eval_batches_honors_eval_limit():
+    ds = FederatedData([_device(16), _device(17)], batch_size=1,
+                       eval_batch_limit=4)
+    stacked, valid, _ = stack_eval_batches(ds)
+    assert stacked["x"].shape[1] == 4
+    np.testing.assert_array_equal(np.asarray(valid.sum(axis=1), int),
+                                  [4, 4])

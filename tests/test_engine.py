@@ -6,7 +6,6 @@ float-accumulation order — the same trajectory as the per-device looped
 path.  These tests pin that contract at atol 1e-5.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -14,7 +13,6 @@ from repro.configs.base import FederatedConfig
 from repro.core import (FederatedTrainer, make_batched_grad_fn,
                         make_batched_solver, make_grad_fn,
                         make_local_solver)
-from repro.core import pytree as pt
 from repro.data import make_synthetic
 from repro.data.batching import stack_device_batches
 from repro.models.param import init_params

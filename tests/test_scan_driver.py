@@ -1,0 +1,152 @@
+"""Scan-fused multi-round driver vs the Python reference loop.
+
+Two contracts are pinned here (see core/engine.py and core/server.py):
+
+1. **Parity**: with sampling made comparable (the same fixed selection
+   sequence injected into both drivers), ``round_driver="scan"`` must
+   reproduce the Python driver's final params AND loss history at
+   atol 1e-5 over 6 rounds, for every algorithm.
+2. **Determinism**: cross-driver selection identity is explicitly NOT
+   required (host numpy vs on-device jax.random draw from the same
+   distribution but different bit streams) — but each driver must be
+   individually reproducible: fixed seed => identical history, run to
+   run.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer, ScannedDriver, make_scanned_run
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
+         "feddane_pipelined", "feddane_decayed", "scaffold"]
+NUM_ROUNDS = 6
+
+BASE_KW = dict(num_devices=8, devices_per_round=4, local_epochs=2,
+               learning_rate=0.05, mu=0.01, seed=7, correction_decay=0.9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=8, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    # (rounds, 2 phases, K) fixed selection sequence, no replacement
+    sel = np.stack([
+        np.stack([rng.choice(8, 4, replace=False) for _ in range(2)])
+        for _ in range(NUM_ROUNDS)])
+    return ds, params, sel
+
+
+def _leaves_allclose(a, b, atol):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+def _run(ds, params, sel, algo, driver, checkpoint_dir=None, **over):
+    kw = dict(BASE_KW, algorithm=algo, round_driver=driver,
+              engine="loop", chunk_rounds=4)
+    kw.update(over)
+    tr = FederatedTrainer(logreg_loss, ds, FederatedConfig(**kw))
+    return tr.run(params, NUM_ROUNDS, eval_every=2, selections=sel,
+                  checkpoint_dir=checkpoint_dir)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_scan_driver_parity_per_algorithm(setup, algo):
+    """Injected identical selections: the scanned driver's trajectory and
+    in-scan eval history must match the host loop at atol 1e-5."""
+    ds, params, sel = setup
+    hist_py, p_py = _run(ds, params, sel, algo, "python")
+    hist_sc, p_sc = _run(ds, params, sel, algo, "scan")
+    assert list(hist_py["round"]) == list(hist_sc["round"])
+    assert list(hist_py["comm_rounds"]) == list(hist_sc["comm_rounds"])
+    np.testing.assert_allclose(hist_py["loss"], hist_sc["loss"], atol=1e-5)
+    _leaves_allclose(p_py, p_sc, atol=1e-5)
+
+
+@pytest.mark.parametrize("driver", ["python", "scan"])
+def test_driver_individually_reproducible(setup, driver):
+    """Determinism contract (server.py): fixed seed => identical
+    selections, history, and params for THAT driver, run to run.  Equal
+    selections across drivers are NOT required and not asserted."""
+    ds, params, _ = setup
+    runs = [_run(ds, params, None, "feddane", driver) for _ in range(2)]
+    (h1, p1), (h2, p2) = runs
+    assert h1 == h2
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_boundaries_do_not_change_results(setup):
+    """chunk_rounds is an execution knob, not a semantic one."""
+    ds, params, sel = setup
+    h1, p1 = _run(ds, params, sel, "fedprox", "scan", chunk_rounds=2)
+    h2, p2 = _run(ds, params, sel, "fedprox", "scan", chunk_rounds=6)
+    assert h1 == h2
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoints_at_chunk_boundaries(setup, tmp_path):
+    from repro.checkpoint.store import latest_checkpoint, load_checkpoint
+    ds, params, sel = setup
+    d = str(tmp_path / "ckpt")
+    _, p = _run(ds, params, sel, "fedavg", "scan", chunk_rounds=4,
+                checkpoint_dir=d)
+    names = sorted(os.listdir(d))
+    assert names == ["ckpt_00000004.msgpack", "ckpt_00000006.msgpack"]
+    ck = load_checkpoint(latest_checkpoint(d))
+    assert ck["round"] == NUM_ROUNDS
+    _leaves_allclose(ck["params"], p, atol=0)
+
+
+def test_scaffold_with_replacement_falls_back_to_python(setup):
+    """The scanned scatter applies duplicated selections once; the
+    sequential host loop is authoritative, so the trainer must route
+    scaffold + sample_with_replacement there even under 'scan'."""
+    ds, params, _ = setup
+    kw = dict(BASE_KW, algorithm="scaffold", round_driver="scan",
+              sample_with_replacement=True)
+    tr = FederatedTrainer(logreg_loss, ds, FederatedConfig(**kw))
+    hist, _ = tr.run(params, 2)
+    assert tr._scanned is None          # scanned driver never built
+    assert len(hist["loss"]) == 2
+    with pytest.raises(ValueError):     # and the driver itself refuses
+        ScannedDriver(logreg_loss, ds, FederatedConfig(**kw))
+
+
+def test_selections_must_cover_num_rounds(setup):
+    ds, params, sel = setup
+    for driver in ("python", "scan"):
+        with pytest.raises(ValueError):
+            _run(ds, params, sel[:2], "fedavg", driver)
+
+
+def test_unknown_round_driver_rejected(setup):
+    ds, _, _ = setup
+    with pytest.raises(ValueError):
+        FederatedTrainer(logreg_loss, ds,
+                         FederatedConfig(round_driver="fortran"))
+
+
+def test_make_scanned_run_factory(setup):
+    """make_scanned_run shares the trainer's RoundEngine when given one
+    and honors the sampled (non-injected) path end to end."""
+    ds, params, _ = setup
+    cfg = FederatedConfig(algorithm="fedavg", round_driver="scan",
+                          chunk_rounds=0, **BASE_KW)
+    driver = make_scanned_run(logreg_loss, ds, cfg)
+    hist, p = driver.run(params, 3, eval_every=1)
+    assert len(hist["loss"]) == 3
+    assert all(np.isfinite(hist["loss"]))
+    assert hist["comm_rounds"] == [1, 2, 3]

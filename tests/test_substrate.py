@@ -1,6 +1,5 @@
 """Substrate tests: optimizers, checkpointing, data pipeline, sharding
 rules, HLO analysis."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -9,12 +8,11 @@ import pytest
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, \
     save_checkpoint
-from repro.core import pytree as pt
 from repro.data import (make_femnist_like, make_sent140_like,
                         make_shakespeare_like, make_synthetic)
 from repro.launch.hloanalysis import analyze
-from repro.models.param import (ParamSpec, default_rules, init_params,
-                                param_count, param_pspecs, spec_pspec)
+from repro.models.param import (ParamSpec, default_rules, param_count,
+                                spec_pspec)
 from repro.optim import adam, momentum, sgd
 from repro.optim.optimizers import apply_updates
 
@@ -115,7 +113,6 @@ def test_devices_are_heterogeneous():
 # ---------------------------------------------------------------------------
 
 def test_spec_pspec_divisibility_and_conflicts():
-    import jax.sharding as shd
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     rules = default_rules()
     # kv_heads=3 not divisible by model axis (1 divides everything here,

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCHITECTURES

@@ -6,7 +6,6 @@ FedDANE round on convex problems with rho > 0 actually achieves
 E[f(w^t)] <= f(w^{t-1}) - rho ||grad f||^2 empirically.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -14,7 +13,6 @@ from repro.configs.base import FederatedConfig
 from repro.core import (FederatedTrainer, corollary4_mu, rho_convex,
                         rho_device_specific, rho_nonconvex)
 from repro.core import pytree as pt
-from repro.core.client import make_grad_fn
 from repro.data import make_synthetic
 from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
@@ -69,6 +67,7 @@ def test_sufficient_decrease_empirical():
 
     f0 = tr.global_loss(params)
     B = tr.measure_dissimilarity(params)
+    assert np.isfinite(B) and B > 0
     # ||grad f(w0)||^2
     gf = pt.weighted_mean(
         [tr.grad_fn(params, tr._batches(k)) for k in range(10)],
