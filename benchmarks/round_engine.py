@@ -111,31 +111,41 @@ def time_driver(algo: str, driver: str, dataset, params, k: int,
 
 
 def smoke():
-    """Tiny end-to-end run of BOTH drivers for CI's bench-smoke job.
+    """Tiny end-to-end run of EVERY registered algorithm under both
+    drivers for CI's bench-smoke job.
 
-    Asserts each driver completes the run with a finite loss history and
-    returns one row per driver for the JSON artifact.  Small enough for
-    a CPU-only runner (8 devices, K=4, E=1, 3 rounds)."""
+    The algorithm list comes from the strategy registry
+    (``repro.core.strategies.available_algorithms``), not a hard-coded
+    list, so a newly registered spec is smoke-covered on the benchmark
+    path automatically.  Asserts each run completes with a finite loss
+    history and returns one row per (algorithm, driver) for the JSON
+    artifact.  Small enough for a CPU-only runner (8 devices, K=4,
+    E=1, 2 rounds each)."""
     import numpy as np
+
+    from repro.core.strategies import available_algorithms
 
     dataset = make_synthetic(1, 1, num_devices=8, seed=0)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
     rows = []
-    for driver in ("python", "scan"):
-        cfg = FederatedConfig(
-            algorithm="feddane", num_devices=8, devices_per_round=4,
-            local_epochs=1, local_batch_size=10, learning_rate=0.01,
-            mu=0.001, seed=1, round_driver=driver, chunk_rounds=3)
-        tr = FederatedTrainer(logreg_loss, dataset, cfg)
-        t0 = time.time()
-        hist, final = tr.run(params, 3, eval_every=1)
-        jax.block_until_ready(final)
-        wall = time.time() - t0
-        assert len(hist["loss"]) == 3, f"{driver}: truncated history"
-        assert np.isfinite(hist["loss"]).all(), f"{driver}: non-finite loss"
-        rows.append({"name": f"bench_smoke_{driver}", "wall_s": wall,
-                     "rounds": 3, "backend": jax.default_backend(),
-                     "final_loss": float(hist["loss"][-1])})
+    for algo in available_algorithms():
+        for driver in ("python", "scan"):
+            cfg = FederatedConfig(
+                algorithm=algo, num_devices=8, devices_per_round=4,
+                local_epochs=1, local_batch_size=10, learning_rate=0.01,
+                mu=0.001, seed=1, round_driver=driver, chunk_rounds=2)
+            tr = FederatedTrainer(logreg_loss, dataset, cfg)
+            t0 = time.time()
+            hist, final = tr.run(params, 2, eval_every=1)
+            jax.block_until_ready(final)
+            wall = time.time() - t0
+            name = f"bench_smoke_{algo}_{driver}"
+            assert len(hist["loss"]) == 2, f"{name}: truncated history"
+            assert np.isfinite(hist["loss"]).all(), \
+                f"{name}: non-finite loss"
+            rows.append({"name": name, "wall_s": wall,
+                         "rounds": 2, "backend": jax.default_backend(),
+                         "final_loss": float(hist["loss"][-1])})
     return rows
 
 

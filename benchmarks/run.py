@@ -5,11 +5,12 @@ roofline.  Prints ``name,us_per_call,derived`` CSV rows.
   BENCH_SCALE=0.3 PYTHONPATH=src python -m benchmarks.run   # faster
   PYTHONPATH=src python -m benchmarks.run --smoke [--out bench_smoke.json]
 
-``--smoke`` is the CI perf-path canary: a tiny multi-round run of both
-round drivers (python + scan) that must complete with finite losses.  It
-prints one timing line and writes a JSON artifact, so a regression on
-the benchmark path breaks CI instead of lurking until the next full
-benchmark run.
+``--smoke`` is the CI perf-path canary: a tiny multi-round run of EVERY
+algorithm in the strategy registry under both round drivers (python +
+scan) that must complete with finite losses.  It prints one timing line
+and writes a JSON artifact, so a regression on the benchmark path — or
+a registered spec that breaks a driver — fails CI instead of lurking
+until the next full benchmark run.
 """
 import json
 import os
@@ -25,10 +26,11 @@ def smoke(out_path: str) -> None:
     assert rows, "smoke benchmark produced no rows"
     with open(out_path, "w") as f:
         json.dump({"total_wall_s": wall, "rows": rows}, f, indent=2)
-    drivers = "+".join(r["name"].replace("bench_smoke_", "")
-                       for r in rows)
+    algos = sorted({r["name"].replace("bench_smoke_", "")
+                    .rsplit("_", 1)[0] for r in rows})
     print(f"bench_smoke,{wall * 1e6:.0f},"
-          f"drivers={drivers} rounds={rows[0]['rounds']} "
+          f"algos={len(algos)}({'+'.join(algos)}) runs={len(rows)} "
+          f"rounds={rows[0]['rounds']} "
           f"backend={rows[0]['backend']} out={out_path} ok")
 
 

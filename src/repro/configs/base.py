@@ -155,10 +155,15 @@ INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K,
 
 @dataclass(frozen=True)
 class FederatedConfig:
-    """FedDANE / FedAvg / FedProx round configuration (paper Alg. 1/2)."""
-    algorithm: str = "feddane"       # fedavg | fedprox | feddane |
-                                     # feddane_pipelined | feddane_decayed |
-                                     # scaffold | inexact_dane
+    """Federated round configuration (paper Alg. 1/2 + registered
+    strategies).
+
+    ``algorithm`` accepts any name registered in
+    ``repro.core.strategies`` (the single source of truth — see
+    ``available_algorithms()``); unknown names raise at construction
+    with the full sorted list.
+    """
+    algorithm: str = "feddane"       # any repro.core.strategies name
     num_devices: int = 30            # N
     devices_per_round: int = 10      # K
     local_epochs: int = 20           # E
@@ -170,6 +175,16 @@ class FederatedConfig:
     # decayed FedDANE (paper §V-C): correction scaled by decay^t
     correction_decay: float = 1.0
     seed: int = 0
+    # server-side optimizer over the round's aggregate pseudo-gradient
+    # w^{t-1} - mean_k w_k (core/server.py server_step): "sgd" at
+    # server_lr=1.0 is plain Alg. 1/2 averaging; "momentum"/"adam" come
+    # from repro.optim.  Specs may force their own (fedavgm).
+    server_opt: str = "sgd"          # sgd | momentum | adam
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+    # sdane auxiliary prox-center step: v^{t+1} = v^t + center_lr *
+    # (w^t - v^t); center_lr=1.0 collapses sdane to feddane
+    center_lr: float = 0.5
     # round execution engine (core/engine.py):
     #   "batched" — one jitted vmapped program per round (accelerator hot
     #               path: fused Pallas update, MXU-amortized device axis)
@@ -194,3 +209,13 @@ class FederatedConfig:
     # rounds fused per scanned-driver dispatch; checkpoints / verbose
     # printing happen at chunk boundaries (0 -> one chunk per run)
     chunk_rounds: int = 32
+
+    def __post_init__(self):
+        # Registry-backed validation: the algorithm-strategy registry is
+        # the only list of valid names (imported lazily — configs is a
+        # leaf layer).  engine / round_driver stay late-validated by the
+        # trainer, which owns their backend-dependent resolution.
+        from repro.core.strategies import (algorithm_spec,
+                                           validate_server_opt)
+        algorithm_spec(self.algorithm)
+        validate_server_opt(self.server_opt)

@@ -6,12 +6,17 @@ from repro.core.client import (LocalResult, gamma_inexactness,
                                make_exact_solver, make_grad_fn,
                                make_local_solver)
 from repro.core.engine import RoundEngine, ScannedDriver, make_scanned_run
+from repro.core.strategies import (AlgorithmSpec, algorithm_spec,
+                                   available_algorithms,
+                                   register_algorithm)
 from repro.core.theory import (b_dissimilarity, corollary4_mu, rho_convex,
                                rho_device_specific, rho_nonconvex)
 
 __all__ = [
     "FederatedTrainer", "FederatedState", "TWO_ROUND_ALGOS", "RoundEngine",
     "ScannedDriver", "make_scanned_run",
+    "AlgorithmSpec", "register_algorithm", "algorithm_spec",
+    "available_algorithms",
     "make_local_solver", "make_grad_fn", "make_exact_solver",
     "make_batched_solver", "make_batched_grad_fn",
     "gamma_inexactness", "LocalResult",

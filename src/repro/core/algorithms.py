@@ -1,17 +1,17 @@
-"""Federated optimization algorithms (paper Alg. 1 & 2 + §V-C variants).
+"""Federated optimization trainer (paper Alg. 1 & 2 + §V-C variants).
 
 ``FederatedTrainer`` orchestrates simulation rounds over a federated
-dataset.  All algorithms share one local solver (see client.py); they
-differ only in (corr, mu) handed to each selected device and in the
-communication pattern:
-
-- fedavg            McMahan et al. — Alg. 1
-- fedprox           Li et al. — proximal term only
-- feddane           Alg. 2 — two communication rounds per update
-- inexact_dane      Reddi et al. — FedDANE with full participation
-- feddane_pipelined §V-C — stale gradient correction, ONE round per update
-- feddane_decayed   §V-C — correction term decayed by ``correction_decay^t``
-- scaffold          Karimireddy et al. — control variates (beyond paper)
+dataset.  There is no per-algorithm code here: every algorithm is ONE
+declarative :class:`~repro.core.strategies.AlgorithmSpec` registered in
+``repro.core.strategies`` (run
+``python -c "import repro.core.strategies as s; print(s.available_algorithms())"``
+for the live list — fedavg, fedprox, feddane, the §V-C variants,
+scaffold, fedavgm, sdane, ... plus anything you register).  All
+algorithms share one local solver (see client.py); the spec declares
+what differs: the round's phase structure, the per-device correction,
+the effective proximal coefficient, persistent state, and the server's
+post-aggregation update (optionally a server-side optimizer from
+``repro.optim`` — ``FederatedConfig.server_opt``).
 
 Every algorithm runs on one of two interchangeable engines, selected by
 ``FederatedConfig.engine``:
@@ -23,7 +23,7 @@ Every algorithm runs on one of two interchangeable engines, selected by
 - ``"loop"`` (reference): one jitted solver/grad dispatch per device
   with plain pytree-op updates.  Numerically equivalent (parity pinned
   by tests/test_engine.py) and authoritative when in doubt — it is an
-  independent implementation of the same round semantics.
+  independent interpretation of the same spec.
 - ``"auto"`` (default): "batched" on accelerators, "loop" on CPU —
   XLA:CPU serializes per-device batched dots, so the lockstep program
   measurably pessimizes CPU rounds (see benchmarks/round_engine.py).
@@ -41,7 +41,8 @@ selects how ``run()`` drives the *round loop*:
   sampler's (see server.py): same distribution, each driver individually
   seed-reproducible, cross-driver selections NOT identical.
 - ``"python"``: this module's host loop over ``round()`` — the reference
-  driver, and the only one supporting scaffold+sample_with_replacement.
+  driver, and the only one supporting control-variate specs (scaffold)
+  with ``sample_with_replacement``.
 - ``"auto"``: scan wherever ``engine`` resolved to batched (accelerators
   by default), python otherwise — so an explicit ``engine="loop"`` keeps
   the authoritative host loop unless ``"scan"`` is also explicit.
@@ -59,9 +60,17 @@ from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_grad_fn, make_local_solver
 from repro.core.engine import RoundEngine, ScannedDriver
+from repro.core.strategies import (ControlCtx, CorrCtx, algorithm_spec,
+                                   available_algorithms, init_aux,
+                                   make_server_opt, runtime_state_fields)
 from repro.data.batching import num_batches_of, stack_device_batches
 
-TWO_ROUND_ALGOS = {"feddane", "inexact_dane"}
+#: Algorithms costing two communication rounds per update.  This is a
+#: back-compat SNAPSHOT of the registry taken at import time — specs
+#: registered later are not reflected here; the live source of truth is
+#: ``algorithm_spec(name).comm_per_round``.
+TWO_ROUND_ALGOS = {name for name in available_algorithms()
+                   if algorithm_spec(name).comm_per_round == 2}
 
 
 @dataclass
@@ -72,6 +81,8 @@ class FederatedState:
     g_prev: Any = None                    # pipelined FedDANE stale gradient
     controls: Optional[List[Any]] = None  # SCAFFOLD per-device c_k
     c_server: Any = None                  # SCAFFOLD server c
+    center: Any = None                    # S-DANE auxiliary prox center v^t
+    opt_state: Any = None                 # server-optimizer state
 
 
 class FederatedTrainer:
@@ -80,6 +91,12 @@ class FederatedTrainer:
     ``dataset`` must provide: ``num_devices``, ``weights`` (p_k, summing
     to 1), ``device_batches(k)`` -> pytree of (num_batches, batch, ...),
     and ``eval_batches()`` -> iterable over (weight, batches) per device.
+
+    The trainer is a generic interpreter of
+    ``strategies.algorithm_spec(cfg.algorithm)``: sampling follows the
+    spec's phase structure, per-device corrections come from the spec's
+    rule, and post-aggregation server behavior (optimizer step, control
+    and center updates) from the spec's declared state updates.
     """
 
     def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
@@ -88,16 +105,21 @@ class FederatedTrainer:
         self.dataset = dataset
         self.cfg = cfg
         self.eval_fn = eval_fn
+        self.spec = algorithm_spec(cfg.algorithm)
         self.rng = np.random.default_rng(cfg.seed)
         self.solver = make_local_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
         self.grad_fn = make_grad_fn(loss_fn)
+        self._server_opt = make_server_opt(self.spec, cfg)
+        self._state_fields = runtime_state_fields(self.spec, cfg)
         engine = cfg.engine
         if engine == "auto":
             engine = "batched" if jax.default_backend() != "cpu" else "loop"
         if engine == "batched":
-            self.engine: Optional[RoundEngine] = RoundEngine(loss_fn, cfg)
+            self.engine: Optional[RoundEngine] = RoundEngine(
+                loss_fn, cfg, spec=self.spec,
+                num_devices=dataset.num_devices)
         elif engine == "loop":
             self.engine = None
         else:
@@ -126,7 +148,7 @@ class FederatedTrainer:
             # engine="loop" (the authoritative reference) must keep the
             # host loop unless the user also explicitly asks for "scan".
             driver = "scan" if self.engine is not None else "python"
-        if (driver == "scan" and self.cfg.algorithm == "scaffold"
+        if (driver == "scan" and self.spec.control_update is not None
                 and self.cfg.sample_with_replacement):
             # Duplicated selections need sequential control updates; the
             # scanned scatter (like the batched engine's) applies them
@@ -142,131 +164,149 @@ class FederatedTrainer:
 
     def init(self, params) -> FederatedState:
         st = FederatedState(params=params)
-        if self.cfg.algorithm == "scaffold":
-            st.controls = [pt.zeros_like(params)
-                           for _ in range(self.dataset.num_devices)]
-            st.c_server = pt.zeros_like(params)
-        if self.cfg.algorithm == "feddane_pipelined":
-            st.g_prev = pt.zeros_like(params)
+        aux = init_aux(self.spec, self.cfg, params,
+                       self.dataset.num_devices, stacked=False)
+        st.g_prev = aux.get("g_prev")
+        st.controls = aux.get("controls")
+        st.c_server = aux.get("c_server")
+        st.center = aux.get("center")
+        st.opt_state = aux.get("opt")
         return st
 
-    # -- algorithms -------------------------------------------------------
+    # -- state <-> engine-aux plumbing ------------------------------------
 
-    def round(self, st: FederatedState) -> FederatedState:
-        algo = self.cfg.algorithm
-        w0, mu = st.params, self.cfg.mu
-        eng = self.engine
-
-        if algo in ("fedavg", "fedprox"):
-            S = self._sample()
-            mu_eff = 0.0 if algo == "fedavg" else mu
-            if eng is not None:
-                b, v = self._stack(S)
-                st.params = eng.avg_round(w0, b, v, mu_eff)
-            else:
-                zeros = pt.zeros_like(w0)
-                updates = [
-                    self.solver(w0, zeros, mu_eff, self._batches(k)).params
-                    for k in S]
-                st.params = server.aggregate_mean(updates)
-            st.comm_rounds += 1
-
-        elif algo in ("feddane", "inexact_dane", "feddane_decayed"):
-            # Phase A (Alg. 2 lines 3-6) approximates the full gradient
-            # over S1; phase B (lines 7-9) has S2 solve the subproblem.
-            full = np.arange(self.dataset.num_devices)
-            S1 = full if algo == "inexact_dane" else self._sample()
-            S2 = full if algo == "inexact_dane" else self._sample()
-            decay = (self.cfg.correction_decay ** st.round
-                     if algo == "feddane_decayed" else 1.0)
-            if eng is not None:
-                if S1 is S2:   # full participation: one stack, one pass
-                    b, v = self._stack(S1)
-                    st.params = eng.dane_shared_round(w0, b, v, mu, decay)
-                else:
-                    b1, v1 = self._stack(S1)
-                    b2, v2 = self._stack(S2)
-                    st.params = eng.dane_round(w0, b1, v1, b2, v2, mu,
-                                               decay)
-            else:
-                g_t = server.aggregate_gradients(
-                    [self.grad_fn(w0, self._batches(k)) for k in S1])
-                updates = []
-                for k in S2:
-                    bk = self._batches(k)
-                    corr = pt.scale(pt.sub(g_t, self.grad_fn(w0, bk)),
-                                    decay)
-                    updates.append(self.solver(w0, corr, mu, bk).params)
-                st.params = server.aggregate_mean(updates)
-            st.comm_rounds += 2
-
-        elif algo == "feddane_pipelined":
-            # §V-C: one round — local solve uses the STALE g from the
-            # previous round; this round's gradients refresh it.
-            S = self._sample()
-            if eng is not None:
-                b, v = self._stack(S)
-                st.params, st.g_prev = eng.pipelined_round(
-                    w0, st.g_prev, b, v, mu)
-            else:
-                updates, grads = [], []
-                for k in S:
-                    bk = self._batches(k)
-                    gk = self.grad_fn(w0, bk)
-                    grads.append(gk)
-                    corr = pt.sub(st.g_prev, gk)
-                    updates.append(self.solver(w0, corr, mu, bk).params)
-                st.params = server.aggregate_mean(updates)
-                st.g_prev = server.aggregate_gradients(grads)
-            st.comm_rounds += 1
-
-        elif algo == "scaffold":
-            S = self._sample()
-            # With replacement, duplicated selections must update controls
-            # sequentially (twice); the batched scatter would apply them
-            # once — route to the authoritative looped path.
-            if self.cfg.sample_with_replacement:
-                eng = None
-            if eng is not None:
-                b, v = self._stack(S)
-                c_k = jax.tree_util.tree_map(
+    def _gather_aux(self, st: FederatedState, S) -> Dict[str, Any]:
+        """The engine's aux dict for this round: persistent state, with
+        per-device controls gathered into a K-stack for the selection."""
+        aux: Dict[str, Any] = {}
+        for f in self._state_fields:
+            if f == "g_prev":
+                aux["g_prev"] = st.g_prev
+            elif f == "center":
+                aux["center"] = st.center
+            elif f == "opt":
+                aux["opt"] = st.opt_state
+            elif f == "controls":
+                aux["c_server"] = st.c_server
+                aux["controls"] = jax.tree_util.tree_map(
                     lambda *xs: jax.numpy.stack(xs),
                     *[st.controls[int(k)] for k in S])
-                st.params, st.c_server, c_new = eng.scaffold_round(
-                    w0, st.c_server, c_k, b, v,
-                    float(self.dataset.num_devices))
+        return aux
+
+    def _scatter_aux(self, st: FederatedState, aux: Dict[str, Any],
+                     S) -> None:
+        for f in self._state_fields:
+            if f == "g_prev":
+                st.g_prev = aux["g_prev"]
+            elif f == "center":
+                st.center = aux["center"]
+            elif f == "opt":
+                st.opt_state = aux["opt"]
+            elif f == "controls":
+                st.c_server = aux["c_server"]
                 for i, k in enumerate(S):
                     st.controls[int(k)] = jax.tree_util.tree_map(
-                        lambda x, i=i: x[i], c_new)
-            else:
-                # Karimireddy et al. option II: corrections use the
-                # ROUND-START server control; c_server absorbs the
-                # (1/N)-scaled correction deltas once, after the loop.
-                c0 = st.c_server
-                updates, deltas = [], []
-                for k in S:
-                    bk = self._batches(k)
-                    corr = pt.sub(c0, st.controls[int(k)])
-                    res = self.solver(w0, corr, 0.0, bk)
-                    updates.append(res.params)
-                    nsteps = self.cfg.local_epochs * num_batches_of(bk)
-                    ck_new = pt.add(
-                        pt.sub(st.controls[int(k)], c0),
-                        pt.scale(pt.sub(w0, res.params),
-                                 1.0 / (nsteps * self.cfg.learning_rate)))
-                    deltas.append(pt.sub(ck_new, st.controls[int(k)]))
-                    st.controls[int(k)] = ck_new
-                st.c_server = pt.add(
-                    c0, pt.scale(pt.mean(deltas),
-                                 len(deltas) / self.dataset.num_devices))
-                st.params = server.aggregate_mean(updates)
-            st.comm_rounds += 1
+                        lambda x, i=i: x[i], aux["controls"])
 
+    # -- the generic round ------------------------------------------------
+
+    def round(self, st: FederatedState) -> FederatedState:
+        spec, cfg = self.spec, self.cfg
+        w0 = st.params
+        mu = cfg.mu if spec.use_mu else 0.0
+        decay = (spec.decay(cfg, st.round)
+                 if spec.decay is not None else 1.0)
+        eng = self.engine
+        # With replacement, duplicated selections must update controls
+        # sequentially (twice); the batched scatter would apply them
+        # once — route to the authoritative looped path.
+        if spec.control_update is not None and cfg.sample_with_replacement:
+            eng = None
+
+        # Selections: S1 feeds the gradient gather, S2 the local solves
+        # (spec.num_selections: 0 = full participation serves both,
+        # 1 = one draw serves both, 2 = independent draws).
+        if spec.num_selections == 0:
+            S1 = S2 = np.arange(self.dataset.num_devices)
+        elif spec.num_selections == 1:
+            S1 = S2 = self._sample()
         else:
-            raise ValueError(f"unknown algorithm {algo!r}")
+            S1, S2 = self._sample(), self._sample()
+        shared = S1 is S2 and spec.grad_source == "fresh"
 
+        if eng is not None:
+            b, v = self._stack(S2)
+            phase_a = (self._stack(S1)
+                       if spec.grad_source == "fresh" and not shared
+                       else None)
+            aux = self._gather_aux(st, S2)
+            st.params, aux_new = eng.round(w0, aux, phase_a, b, v, decay)
+            self._scatter_aux(st, aux_new, S2)
+        else:
+            self._loop_round(st, S1, S2, mu, decay)
+
+        st.comm_rounds += spec.comm_per_round
         st.round += 1
         return st
+
+    def _loop_round(self, st: FederatedState, S1, S2, mu,
+                    decay) -> None:
+        """Per-device reference interpretation of the spec: one jitted
+        solver/grad dispatch per device, plain pytree-op aggregation."""
+        spec, cfg = self.spec, self.cfg
+        w0 = st.params
+        zeros = pt.zeros_like(w0)
+
+        g_global = None
+        if spec.grad_source == "fresh":
+            g_global = server.aggregate_gradients(
+                [self.grad_fn(w0, self._batches(k)) for k in S1])
+        elif spec.grad_source == "stale":
+            g_global = st.g_prev
+
+        c0 = st.c_server
+        updates, fresh_grads, deltas = [], [], []
+        for k in S2:
+            bk = self._batches(k)
+            g_local = self.grad_fn(w0, bk) if spec.local_grad else None
+            if spec.updates_g_prev:
+                fresh_grads.append(g_local)
+            if spec.correction is not None:
+                corr = spec.correction(CorrCtx(
+                    w0=w0, g_global=g_global, g_local=g_local,
+                    c_server=c0,
+                    c_local=(st.controls[int(k)]
+                             if st.controls is not None else None),
+                    center=st.center, mu=mu, decay=decay))
+            else:
+                corr = zeros
+            res = self.solver(w0, corr, mu, bk)
+            updates.append(res.params)
+            if spec.control_update is not None:
+                # Karimireddy et al. option II: corrections used the
+                # ROUND-START server control; each duplicate selection
+                # refreshes the device control sequentially.
+                nsteps = cfg.local_epochs * num_batches_of(bk)
+                ck_new = spec.control_update(ControlCtx(
+                    c_local=st.controls[int(k)], c_server=c0, w0=w0,
+                    w_new=res.params,
+                    inv_steps=1.0 / (nsteps * cfg.learning_rate)))
+                deltas.append(pt.sub(ck_new, st.controls[int(k)]))
+                st.controls[int(k)] = ck_new
+
+        w_agg = server.aggregate_mean(updates)
+        if spec.control_update is not None:
+            # c_server absorbs the (1/N)-scaled correction deltas once,
+            # after the loop.
+            st.c_server = pt.add(
+                c0, pt.scale(pt.mean(deltas),
+                             len(deltas) / self.dataset.num_devices))
+        if spec.updates_g_prev:
+            st.g_prev = server.aggregate_gradients(fresh_grads)
+        st.params, st.opt_state = server.server_step(
+            w0, w_agg, self._server_opt, st.opt_state)
+        if spec.center_update is not None:
+            st.center = spec.center_update(st.center, st.params, cfg)
 
     # -- evaluation -------------------------------------------------------
 
@@ -315,7 +355,7 @@ class FederatedTrainer:
                 raise ValueError(
                     f"selections covers {sel.shape[0]} rounds "
                     f"< num_rounds={num_rounds}")
-            two_phase = self.cfg.algorithm in ("feddane", "feddane_decayed")
+            two_phase = self.spec.num_selections == 2
             for t in range(num_rounds):
                 row = sel[t]
                 phases = [row] if row.ndim == 1 else list(row)

@@ -47,10 +47,11 @@ def make_local_solver(loss_fn: Callable, *, learning_rate: float,
         F_k(w) + <corr, w - w0> + (mu/2) ||w - w0||^2
     whose gradient is  grad F_k(w) + corr + mu (w - w0).
 
-    - FedAvg:   corr = 0,                         mu = 0
-    - FedProx:  corr = 0,                         mu > 0
-    - FedDANE:  corr = g_t - grad F_k(w0),        mu >= 0   (Alg. 2, eq. 3)
-    - SCAFFOLD: corr = c - c_k,                   mu = 0
+    (corr, mu) per algorithm comes from the registered AlgorithmSpec
+    (repro.core.strategies) — e.g. FedAvg corr=0 mu=0, FedProx corr=0
+    mu>0, FedDANE corr = g_t - grad F_k(w0) (Alg. 2, eq. 3), SCAFFOLD
+    corr = c - c_k, S-DANE folds its auxiliary-center prox shift
+    mu (w0 - v) into corr so this solver needs no extra anchor arg.
 
     ``batches``: pytree with leaves (num_batches, batch, ...); per-batch
     loss must already be mask-aware (data layer contract).

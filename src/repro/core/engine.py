@@ -12,13 +12,19 @@ differ.  This module exploits that:
   power-of-two shapes bound recompilation),
 - the local solver and the full-gradient are ``jax.vmap``-ed over that
   axis (``client.make_batched_solver`` / ``make_batched_grad_fn``),
-- all sampling-independent phases of a round — FedDANE phase-A gradient
-  aggregation, per-device correction construction, phase-B solves, and
-  the server mean — fuse into **one jitted round function per algorithm
-  family**, with parameter buffers donated on accelerator backends,
+- the whole round — gradient gather, per-device correction, solves,
+  server mean, state updates — fuses into **one jitted round program**,
+  with round-state buffers donated on accelerator backends,
 - inside the solver, the per-step update runs through the fused
   ``dane_update`` Pallas kernel (interpret on CPU, Mosaic on TPU)
   instead of the 4-op pytree expression.
+
+There is no per-algorithm code here: :class:`RoundEngine` is a generic
+interpreter of the registered :class:`~repro.core.strategies.
+AlgorithmSpec` (see ``core/strategies``).  The spec declares the phase
+structure, correction rule, and state updates; the engine compiles ONE
+round program for whatever spec it is given — registering a new
+algorithm requires no engine change.
 
 Execution model
 ---------------
@@ -29,17 +35,14 @@ is *exactly* the one the scalar solver would produce — the two engines
 agree to float-accumulation order (parity tests pin this at atol 1e-5).
 
 The looped path (``FederatedConfig.engine = "loop"``) remains the
-authoritative reference: it is an independent implementation (plain
-pytree ops, per-device dispatch) used to A/B the engine and to validate
-the Pallas kernel end-to-end.  Semantics the engine does not accelerate:
-``sample_with_replacement=True`` under SCAFFOLD would update duplicated
-device controls once, not twice (the looped path applies duplicates
+authoritative reference: it is an independent interpretation of the
+same spec (plain pytree ops, per-device dispatch) used to A/B the
+engine and to validate the Pallas kernel end-to-end.  Semantics the
+engine does not accelerate: ``sample_with_replacement=True`` for
+control-variate specs (SCAFFOLD) would update duplicated device
+controls once, not twice (the looped path applies duplicates
 sequentially), so ``FederatedTrainer`` routes that combination to the
 looped path even when ``engine="batched"``.
-
-Round-function signatures take scalars (mu, decay, ...) as traced
-arguments, so one compiled executable serves the paper's whole
-(mu, participation) tuning grid at a given stacked shape.
 
 Scanned multi-round driver
 --------------------------
@@ -72,12 +75,18 @@ round functions from Python.  Its execution model:
   and verbose printing interleave at chunk boundaries — the only points
   where state returns to host.
 
-Semantic caveats: SCAFFOLD + ``sample_with_replacement`` stays on the
-Python driver (duplicated selections must update a device's control
-twice, sequentially — same restriction as the batched engine, but here
-the whole driver falls back); ``feddane_decayed``'s ``decay^t`` is
+The scan body is the SAME generic spec interpretation the per-round
+engine jits (``RoundEngine.round_body``), wrapped with on-device
+gather/scatter of selections and algorithm state — so new registered
+specs run under the scanned driver with no driver change either.
+
+Semantic caveats: control-variate specs + ``sample_with_replacement``
+stay on the Python driver (duplicated selections must update a device's
+control twice, sequentially — same restriction as the batched engine,
+but here the whole driver falls back); a spec's ``decay(cfg, t)`` is
 computed from the traced round index, and per-round ``comm_rounds`` is
-reconstructed host-side (it is a deterministic ``2t`` / ``t`` ramp).
+reconstructed host-side (it is a deterministic ``comm_per_round * t``
+ramp).
 """
 from __future__ import annotations
 
@@ -91,6 +100,9 @@ from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_batched_grad_fn, make_batched_solver
+from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
+                                   algorithm_spec, init_aux,
+                                   make_server_opt, runtime_state_fields)
 from repro.data.batching import stack_device_batches, stack_eval_batches
 
 
@@ -106,104 +118,115 @@ def _stack_zeros(w0, k: int):
 
 
 class RoundEngine:
-    """Per-trainer factory of the four jitted round programs.
+    """Generic jitted interpreter of one :class:`AlgorithmSpec`.
 
     One instance is built per ``FederatedTrainer`` (it bakes in loss_fn,
-    learning rate and epoch count); jit caching is keyed by the stacked
-    batch shapes, which the data layer's power-of-two bucketing bounds.
+    the spec, learning rate and epoch count); jit caching is keyed by
+    the stacked batch shapes, which the data layer's power-of-two
+    bucketing bounds.
+
+    The round program signature is uniform across algorithms::
+
+        round(w0, aux, phase_a, batches, valid, decay)
+            -> (new_params, new_aux)
+
+    - ``aux``: dict of this spec's persistent round state (see
+      ``strategies.runtime_state_fields``) — ``g_prev``, ``c_server``,
+      ``controls`` (K-selected stack), ``center``, ``opt``.  Donated on
+      accelerator backends; ``w0`` is NOT donated (on round 1 it is the
+      caller's params buffer, which examples and benchmarks reuse).
+    - ``phase_a``: ``(batches, valid)`` stack for a separate
+      gradient-gather selection, or ``None`` when the solve selection
+      serves both phases (one shared gradient pass — full
+      participation) or no fresh gather is needed.
+    - ``decay``: traced scalar from ``spec.decay`` (1.0 when undeclared),
+      so one compiled executable serves a decay schedule at a given
+      stacked shape.
+
+    ``round_body`` is the same function un-jitted, for callers that
+    embed it in a larger traced program (the scanned driver).
     """
 
-    def __init__(self, loss_fn: Callable, cfg: FederatedConfig):
+    def __init__(self, loss_fn: Callable, cfg: FederatedConfig,
+                 spec: Optional[AlgorithmSpec] = None,
+                 num_devices: Optional[int] = None):
         self.cfg = cfg
+        self.spec = spec if spec is not None else algorithm_spec(
+            cfg.algorithm)
+        self.num_devices = num_devices
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
         self._grads = make_batched_grad_fn(loss_fn)
-        # Donate only trainer-owned round state (g_prev / c_server /
-        # stacked controls).  w0 is NOT donated: on round 1 it is the
-        # caller's params buffer, which examples and benchmarks reuse.
-        self.avg_round = jax.jit(self._avg_round)
-        self.dane_round = jax.jit(self._dane_round)
-        self.dane_shared_round = jax.jit(self._dane_shared_round)
-        self.pipelined_round = jax.jit(
-            self._pipelined_round, donate_argnums=_donate_argnums((1,)))
-        self.scaffold_round = jax.jit(
-            self._scaffold_round, donate_argnums=_donate_argnums((1, 2)))
+        self._server_opt = make_server_opt(self.spec, cfg)
+        self.round_body = self._make_round_body()
+        self.round = jax.jit(self.round_body,
+                             donate_argnums=_donate_argnums((1,)))
 
-    # -- round programs (pure; jitted in __init__) ------------------------
+    def _make_round_body(self) -> Callable:
+        spec, cfg = self.spec, self.cfg
+        mu = cfg.mu if spec.use_mu else 0.0
+        opt = self._server_opt
+        if spec.control_update is not None and self.num_devices is None:
+            raise ValueError(
+                f"spec {spec.name!r} updates control variates; "
+                f"RoundEngine needs num_devices")
+        n_dev = float(self.num_devices or 0)
 
-    def _avg_round(self, w0, batches, valid, mu):
-        """FedAvg / FedProx: K local solves (corr = 0) + server mean."""
-        corr = _stack_zeros(w0, valid.shape[0])
-        res = self._solver(w0, corr, mu, batches, valid)
-        return server.aggregate_stacked(res.params)
+        def round_body(w0, aux, phase_a, batches, valid, decay):
+            g_global = g_local = None
+            if spec.grad_source == "fresh":
+                if phase_a is None:
+                    # shared selection: one gradient pass serves the
+                    # gather AND the per-device corrections
+                    g_local = self._grads(w0, batches, valid)
+                    g_global = server.aggregate_stacked(g_local)
+                else:
+                    g_global = server.aggregate_stacked(
+                        self._grads(w0, phase_a[0], phase_a[1]))
+                    if spec.local_grad:
+                        g_local = self._grads(w0, batches, valid)
+            elif spec.grad_source == "stale":
+                g_global = aux["g_prev"]
+                g_local = self._grads(w0, batches, valid)
 
-    def _dane_round(self, w0, batches_a, valid_a, batches_b, valid_b,
-                    mu, decay):
-        """FedDANE / decayed FedDANE (Alg. 2, both phases, S1 != S2).
+            if spec.correction is not None:
+                corr = spec.correction(CorrCtx(
+                    w0=w0, g_global=g_global, g_local=g_local,
+                    c_server=aux.get("c_server"),
+                    c_local=aux.get("controls"),
+                    center=aux.get("center"), mu=mu, decay=decay))
+            else:
+                corr = _stack_zeros(w0, valid.shape[0])
+            res = self._solver(w0, corr, mu, batches, valid)
+            w_agg = server.aggregate_stacked(res.params)
 
-        Phase A (lines 3-6): g_t as the mean full gradient over the first
-        selection.  Phase B (lines 7-9): the second selection solves the
-        corrected subproblem; corrections are built per-device on the
-        stacked axis.
-        """
-        g_a = self._grads(w0, batches_a, valid_a)
-        g_t = server.aggregate_stacked(g_a)                # Alg. 2 line 6
-        g_b = self._grads(w0, batches_b, valid_b)
-        corr = jax.tree_util.tree_map(
-            lambda gt, gk: (gt[None] - gk) * decay, g_t, g_b)
-        res = self._solver(w0, corr, mu, batches_b, valid_b)
-        return server.aggregate_stacked(res.params)        # Alg. 2 line 9
+            new = dict(aux)
+            if spec.updates_g_prev:
+                new["g_prev"] = server.aggregate_stacked(g_local)
+            if spec.control_update is not None:
+                nsteps = cfg.local_epochs * valid.sum(axis=1)   # (K,)
+                c_new = spec.control_update(ControlCtx(
+                    c_local=aux["controls"], c_server=aux["c_server"],
+                    w0=w0, w_new=res.params,
+                    inv_steps=1.0 / (nsteps * cfg.learning_rate)))
+                delta = server.aggregate_stacked(
+                    pt.sub(c_new, aux["controls"]))       # (1/K) sum_k
+                k = jnp.float32(valid.shape[0])
+                new["c_server"] = jax.tree_util.tree_map(
+                    lambda cs, d: cs + d * (k / n_dev),
+                    aux["c_server"], delta)
+                new["controls"] = c_new
+            w_out, opt_state = server.server_step(
+                w0, w_agg, opt, aux.get("opt"))
+            if opt is not None:
+                new["opt"] = opt_state
+            if spec.center_update is not None:
+                new["center"] = spec.center_update(
+                    aux["center"], w_out, cfg)
+            return w_out, new
 
-    def _dane_shared_round(self, w0, batches, valid, mu, decay):
-        """Alg. 2 with S1 == S2 (inexact DANE / full participation): the
-        phase-A gradients ARE the phase-B per-device gradients, so the
-        full-gradient pass runs once and is reused — numerically identical
-        to the looped reference, which recomputes the same deterministic
-        values."""
-        g = self._grads(w0, batches, valid)
-        g_t = server.aggregate_stacked(g)
-        corr = jax.tree_util.tree_map(
-            lambda gt, gk: (gt[None] - gk) * decay, g_t, g)
-        res = self._solver(w0, corr, mu, batches, valid)
-        return server.aggregate_stacked(res.params)
-
-    def _pipelined_round(self, w0, g_prev, batches, valid, mu):
-        """§V-C pipelined FedDANE: ONE communication round — solves use
-        the stale g from the previous round while this round's gradients
-        refresh it; both happen in the same fused program."""
-        g_k = self._grads(w0, batches, valid)
-        corr = jax.tree_util.tree_map(
-            lambda gp, gk: gp[None] - gk, g_prev, g_k)
-        res = self._solver(w0, corr, mu, batches, valid)
-        return (server.aggregate_stacked(res.params),
-                server.aggregate_stacked(g_k))
-
-    def _scaffold_round(self, w0, c_server, controls, batches, valid,
-                        num_devices):
-        """SCAFFOLD: control-variate corrections built from the
-        round-start server control; c_server takes its (1/N)-scaled
-        correction sum once at the end of the round (Karimireddy et al.
-        option II), matching the looped reference."""
-        corr = jax.tree_util.tree_map(
-            lambda cs, ck: cs[None] - ck, c_server, controls)
-        res = self._solver(w0, corr, 0.0, batches, valid)
-        nsteps = (self.cfg.local_epochs * valid.sum(axis=1))  # (K,)
-        inv = 1.0 / (nsteps * self.cfg.learning_rate)
-
-        def ck_new_leaf(ck, cs, w0_leaf, w):
-            scale = inv.reshape(inv.shape + (1,) * (w.ndim - 1))
-            return (ck - cs[None]) + scale * (w0_leaf[None] - w)
-
-        controls_new = jax.tree_util.tree_map(
-            ck_new_leaf, controls, c_server, w0, res.params)
-        delta = server.aggregate_stacked(
-            pt.sub(controls_new, controls))                # (1/K) sum_k
-        k = jnp.float32(valid.shape[0])
-        c_server_new = jax.tree_util.tree_map(
-            lambda cs, d: cs + d * (k / num_devices), c_server, delta)
-        return (server.aggregate_stacked(res.params),
-                c_server_new, controls_new)
+        return round_body
 
 
 def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
@@ -230,9 +253,6 @@ def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
     return eval_loss
 
 
-_TWO_ROUND = ("feddane", "inexact_dane", "feddane_decayed")
-
-
 class ScannedDriver:
     """Scan-fused multi-round driver (see module docstring).
 
@@ -245,14 +265,18 @@ class ScannedDriver:
 
     def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
                  engine: Optional[RoundEngine] = None):
-        if cfg.algorithm == "scaffold" and cfg.sample_with_replacement:
+        self.spec = algorithm_spec(cfg.algorithm)
+        if self.spec.control_update is not None and \
+                cfg.sample_with_replacement:
             raise ValueError(
-                "scaffold + sample_with_replacement requires sequential "
-                "per-duplicate control updates; use the python driver")
+                f"{cfg.algorithm} + sample_with_replacement requires "
+                f"sequential per-duplicate control updates; use the "
+                f"python driver")
         self.cfg = cfg
         self.dataset = dataset
         self.engine = engine if engine is not None else RoundEngine(
-            loss_fn, cfg)
+            loss_fn, cfg, spec=self.spec,
+            num_devices=dataset.num_devices)
         self.num_devices = dataset.num_devices
         self.batches_all, self.valid_all = stack_device_batches(
             dataset, np.arange(self.num_devices))
@@ -260,7 +284,8 @@ class ScannedDriver:
         self._eval_loss = _make_stacked_eval(loss_fn, eb, ev, ew)
         self.probs = (jnp.asarray(dataset.weights, jnp.float32)
                       if cfg.weighted_sampling else None)
-        self.comm_per_round = 2 if cfg.algorithm in _TWO_ROUND else 1
+        self.comm_per_round = self.spec.comm_per_round
+        self._state_fields = runtime_state_fields(self.spec, cfg)
         # jit is lazy: each traces once per distinct chunk length.
         self._chunk_sampled = jax.jit(self._make_chunk(inject=False))
         self._chunk_injected = jax.jit(self._make_chunk(inject=True))
@@ -269,16 +294,21 @@ class ScannedDriver:
 
     def _make_chunk(self, inject: bool) -> Callable:
         """Build ``chunk(carry, xs) -> (carry, losses)``: a lax.scan whose
-        body is one whole federated round.  ``inject=True`` reads each
-        round's selection from ``xs["sel"]`` (tests / A-B comparisons);
-        ``inject=False`` samples on device from the carried PRNG key."""
-        cfg, eng = self.cfg, self.engine
-        algo = cfg.algorithm
+        body is one whole federated round — the engine's generic
+        ``round_body`` plus on-device selection gather/scatter.
+        ``inject=True`` reads each round's selection from ``xs["sel"]``
+        (tests / A-B comparisons); ``inject=False`` samples on device
+        from the carried PRNG key."""
+        cfg, spec = self.cfg, self.spec
+        round_body = self.engine.round_body
         n = self.num_devices
         k_sel = (cfg.devices_per_round if cfg.sample_with_replacement
                  else min(cfg.devices_per_round, n))
         batches_all, valid_all = self.batches_all, self.valid_all
-        probs, mu = self.probs, cfg.mu
+        probs = self.probs
+        has_controls = "controls" in self._state_fields
+        aux_fields = tuple(f for f in self._state_fields
+                           if f != "controls")
         tmap = jax.tree_util.tree_map
 
         def sample(key):
@@ -296,36 +326,43 @@ class ScannedDriver:
             else:
                 new["key"], key1, key2 = jax.random.split(carry["key"], 3)
                 s1, s2 = sample(key1), sample(key2)
-            params = carry["params"]
-
-            if algo in ("fedavg", "fedprox"):
-                b, v = gather(s1)
-                params = eng._avg_round(
-                    params, b, v, 0.0 if algo == "fedavg" else mu)
-            elif algo == "inexact_dane":
-                params = eng._dane_shared_round(
-                    params, batches_all, valid_all, mu, 1.0)
-            elif algo in ("feddane", "feddane_decayed"):
-                decay = (jnp.float32(cfg.correction_decay)
-                         ** xs["t"].astype(jnp.float32)
-                         if algo == "feddane_decayed" else 1.0)
-                b1, v1 = gather(s1)
-                b2, v2 = gather(s2)
-                params = eng._dane_round(params, b1, v1, b2, v2, mu, decay)
-            elif algo == "feddane_pipelined":
-                b, v = gather(s1)
-                params, new["g_prev"] = eng._pipelined_round(
-                    params, carry["g_prev"], b, v, mu)
-            elif algo == "scaffold":
-                b, v = gather(s1)
-                c_k = tmap(lambda x: x[s1], carry["controls"])
-                params, new["c_server"], c_new = eng._scaffold_round(
-                    params, carry["c_server"], c_k, b, v, jnp.float32(n))
-                new["controls"] = tmap(lambda c, cn: c.at[s1].set(cn),
-                                       carry["controls"], c_new)
+            # phase mapping mirrors the host loop: the first selection
+            # feeds the gradient gather; the solve selection is the
+            # second only for two-selection specs (and every device for
+            # full-participation specs — including their control
+            # gather/scatter below).
+            sel_solve = s1 if spec.num_selections < 2 else s2
+            decay = (spec.decay(cfg, xs["t"].astype(jnp.float32))
+                     if spec.decay is not None else 1.0)
+            full = spec.num_selections == 0
+            if full:
+                b, v = batches_all, valid_all
+                phase_a = None
             else:
-                raise ValueError(f"unknown algorithm {algo!r}")
-
+                b, v = gather(sel_solve)
+                phase_a = (gather(s1)
+                           if (spec.grad_source == "fresh"
+                               and spec.num_selections == 2) else None)
+            aux = {f: carry[f] for f in aux_fields}
+            if has_controls:
+                # full participation touches every control: pass the
+                # carried (N, ...) stack straight through, no
+                # gather/scatter copies on the hot path
+                aux["c_server"] = carry["c_server"]
+                aux["controls"] = (carry["controls"] if full else
+                                   tmap(lambda x: x[sel_solve],
+                                        carry["controls"]))
+            params, aux_new = round_body(
+                carry["params"], aux, phase_a, b, v, decay)
+            for f in aux_fields:
+                new[f] = aux_new[f]
+            if has_controls:
+                new["c_server"] = aux_new["c_server"]
+                new["controls"] = (aux_new["controls"] if full else
+                                   tmap(lambda c, cn:
+                                        c.at[sel_solve].set(cn),
+                                        carry["controls"],
+                                        aux_new["controls"]))
             new["params"] = params
             loss = jax.lax.cond(
                 xs["do_eval"], self._eval_loss,
@@ -342,11 +379,8 @@ class ScannedDriver:
     def _init_carry(self, params) -> Dict[str, Any]:
         carry = {"params": params,
                  "key": jax.random.PRNGKey(self.cfg.seed)}
-        if self.cfg.algorithm == "feddane_pipelined":
-            carry["g_prev"] = pt.zeros_like(params)
-        if self.cfg.algorithm == "scaffold":
-            carry["c_server"] = pt.zeros_like(params)
-            carry["controls"] = _stack_zeros(params, self.num_devices)
+        carry.update(init_aux(self.spec, self.cfg, params,
+                              self.num_devices, stacked=True))
         return carry
 
     def run(self, params, num_rounds: int, eval_every: int = 1,

@@ -93,3 +93,20 @@ def aggregate_stacked(tree) -> object:
     import jax
 
     return jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)
+
+
+def server_step(w0, w_agg, opt=None, opt_state=None):
+    """Post-aggregation server update (Reddi et al. server-opt view).
+
+    Treats the round's aggregate displacement ``w_agg - w0`` as a
+    pseudo-gradient descent direction, i.e. hands ``w0 - w_agg`` to an
+    ``repro.optim`` (init, update) pair and applies the result to w0.
+    ``opt=None`` is the identity server (plain Alg. 1/2 averaging):
+    ``w_agg`` is returned untouched, bit-identical to the pre-server-opt
+    behavior.  Returns ``(new_params, new_opt_state)``; traceable, so
+    all three execution paths share it.
+    """
+    if opt is None:
+        return w_agg, opt_state
+    updates, new_state = opt.update(pt.sub(w0, w_agg), opt_state, w0)
+    return pt.add(w0, updates), new_state

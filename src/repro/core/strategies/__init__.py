@@ -1,0 +1,27 @@
+"""Pluggable algorithm-strategy API: declarative specs + registry.
+
+One :class:`AlgorithmSpec` per algorithm (see ``builtin.py`` for the
+nine built-ins); the host loop, batched round engine, and scanned
+driver are generic interpreters of the spec.  Register a new spec and
+every execution path — and ``FederatedConfig.algorithm`` validation —
+picks it up immediately.
+"""
+from repro.core.strategies.spec import (GRAD_SOURCES, SERVER_OPTS,
+                                        STATE_FIELDS, AlgorithmSpec,
+                                        ControlCtx, CorrCtx,
+                                        algorithm_spec,
+                                        available_algorithms, bscale,
+                                        init_aux, make_server_opt,
+                                        register_algorithm,
+                                        runtime_state_fields,
+                                        unregister_algorithm,
+                                        validate_server_opt)
+from repro.core.strategies import builtin  # noqa: F401  (registers specs)
+
+__all__ = [
+    "AlgorithmSpec", "CorrCtx", "ControlCtx",
+    "register_algorithm", "unregister_algorithm", "algorithm_spec",
+    "available_algorithms", "make_server_opt", "validate_server_opt",
+    "runtime_state_fields", "init_aux", "bscale",
+    "STATE_FIELDS", "GRAD_SOURCES", "SERVER_OPTS",
+]

@@ -1,0 +1,308 @@
+"""Declarative algorithm specs + registry (the pluggable strategy API).
+
+Every federated algorithm in this repo is ONE registered
+:class:`AlgorithmSpec`.  The spec is purely declarative: it names the
+round's phase structure (how many device selections, where the global
+gradient comes from), the per-device correction rule, which proximal
+coefficient applies, what persistent state the algorithm carries, and
+what the server does after aggregation.  The three execution paths —
+``FederatedTrainer``'s host loop, ``RoundEngine``'s jitted batched
+round, and ``ScannedDriver``'s scan body — are generic interpreters of
+this spec; none of them contains per-algorithm branches.
+
+Polymorphic-shape convention
+----------------------------
+The callables on a spec (``correction``, ``control_update``) are written
+once with ``repro.core.pytree`` ops over *either* per-device pytrees
+(host loop) *or* device-stacked pytrees with a leading K axis (batched /
+scanned paths).  Broadcasting makes one definition serve both: e.g.
+``pt.sub(g_global, g_local)`` is ``(d,) - (d,)`` in the loop and
+``(d,) - (K, d)`` -> ``(K, d)`` when stacked.  Per-device scalars
+(``inv_steps``) go through :func:`bscale`, which handles both a host
+scalar and a ``(K,)`` vector.
+
+Registering a new algorithm
+---------------------------
+Build an :class:`AlgorithmSpec` and call :func:`register_algorithm`; the
+name is immediately valid for ``FederatedConfig.algorithm`` and runs
+under all three execution paths.  See ``builtin.py`` for the nine
+built-in specs (``fedavgm`` is the ~30-line worked example in the
+README).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pytree as pt
+
+
+class CorrCtx(NamedTuple):
+    """Inputs available to a spec's ``correction`` rule.
+
+    Unused fields are ``None`` (e.g. ``g_global`` for algorithms with
+    ``grad_source="none"``).  Leaves are per-device pytrees in the host
+    loop and K-stacked pytrees in the batched/scanned paths; fields that
+    are global state (``w0``, ``g_global``, ``c_server``, ``center``)
+    stay unstacked everywhere and broadcast against the K axis.
+    """
+    w0: Any            # round-start global params w^{t-1}
+    g_global: Any      # aggregated gradient g_t (fresh or stale) or None
+    g_local: Any       # this device's full gradient at w0, or None
+    c_server: Any      # SCAFFOLD server control c, or None
+    c_local: Any       # SCAFFOLD device control c_k, or None
+    center: Any        # S-DANE auxiliary prox center v^t, or None
+    mu: float          # effective proximal coefficient for this round
+    decay: Any         # spec.decay(cfg, t) if declared, else 1.0
+
+
+class ControlCtx(NamedTuple):
+    """Inputs to a spec's post-solve ``control_update`` rule."""
+    c_local: Any       # device control entering the round
+    c_server: Any      # round-start server control
+    w0: Any            # round-start global params
+    w_new: Any         # the device's local solution
+    inv_steps: Any     # 1 / (local_steps * learning_rate); scalar or (K,)
+
+
+def bscale(tree, s):
+    """Scale ``tree`` by ``s``: a scalar (host loop) or a per-device
+    ``(K,)`` vector (stacked paths), broadcast over trailing axes."""
+    s = jnp.asarray(s)
+    return jax.tree_util.tree_map(
+        lambda x: x * s.reshape(s.shape + (1,) * (x.ndim - s.ndim)), tree)
+
+
+#: Persistent-state fields a spec may declare.  ``controls`` implies the
+#: pair (per-device controls, server control ``c_server``); ``opt``
+#: (server-optimizer state) is never declared directly — it is appended
+#: by :func:`runtime_state_fields` whenever the resolved server
+#: optimizer is non-trivial.
+STATE_FIELDS = ("g_prev", "controls", "center")
+
+GRAD_SOURCES = ("none", "fresh", "stale")
+
+SERVER_OPTS = ("sgd", "momentum", "adam")
+
+
+@dataclass(frozen=True)
+class AlgorithmSpec:
+    """One federated algorithm, declaratively.
+
+    Phase structure
+      - ``num_selections``: independent device selections drawn per
+        round — 0 (full participation: every device serves both
+        phases), 1 (one selection serves gradient-gather and solve), or
+        2 (FedDANE-style separate S1 gradient / S2 solve selections).
+      - ``grad_source``: where the correction's global gradient comes
+        from — ``"none"`` (no gradient phase), ``"fresh"`` (gathered at
+        w^{t-1} this round), or ``"stale"`` (the carried ``g_prev``).
+      - ``local_grad``: the correction consumes each solving device's
+        own full gradient at w^{t-1}.
+      - ``updates_g_prev``: the solve phase's local gradients are
+        aggregated into ``g_prev`` for the next round (pipelining).
+
+    Subproblem
+      - ``correction(ctx: CorrCtx) -> pytree``: the linear perturbation
+        handed to the local solver (None -> zeros).  Written once in the
+        polymorphic-shape convention (module docstring).
+      - ``use_mu``: whether ``cfg.mu`` applies (False -> solve with 0).
+      - ``decay(cfg, t) -> scalar``: optional time-dependent scalar made
+        available as ``ctx.decay`` (t may be traced under the scanned
+        driver — use jnp-compatible ops).
+
+    State & server side
+      - ``state_fields``: subset of :data:`STATE_FIELDS` this algorithm
+        persists across rounds.
+      - ``control_update(ctx: ControlCtx) -> c_new``: SCAFFOLD-style
+        per-device control refresh; requires ``"controls"``.
+      - ``server_opt``: force a server optimizer (e.g. ``fedavgm`` ->
+        ``"momentum"``), overriding ``cfg.server_opt``.
+      - ``center_update(center, w_new, cfg) -> center``: S-DANE-style
+        auxiliary prox-center refresh; requires ``"center"``.
+    """
+    name: str
+    summary: str
+    comm_per_round: int
+    num_selections: int
+    grad_source: str = "none"
+    local_grad: bool = False
+    updates_g_prev: bool = False
+    correction: Optional[Callable[[CorrCtx], Any]] = None
+    use_mu: bool = True
+    decay: Optional[Callable[[Any, Any], Any]] = None
+    state_fields: Tuple[str, ...] = ()
+    control_update: Optional[Callable[[ControlCtx], Any]] = None
+    server_opt: Optional[str] = None
+    center_update: Optional[Callable[[Any, Any, Any], Any]] = None
+
+
+_REGISTRY: Dict[str, AlgorithmSpec] = {}
+
+
+def _check_spec(spec: AlgorithmSpec) -> None:
+    """Completeness check: every declared capability has the state and
+    phase structure it needs.  Raised at registration, not first use."""
+    def bad(msg):
+        raise ValueError(f"AlgorithmSpec {spec.name!r}: {msg}")
+
+    if not spec.name or not spec.name.isidentifier():
+        bad(f"name must be a non-empty identifier, got {spec.name!r}")
+    if spec.comm_per_round < 1:
+        bad(f"comm_per_round must be >= 1, got {spec.comm_per_round}")
+    if spec.num_selections not in (0, 1, 2):
+        bad(f"num_selections must be 0, 1 or 2, got {spec.num_selections}")
+    if spec.grad_source not in GRAD_SOURCES:
+        bad(f"grad_source must be one of {GRAD_SOURCES}, "
+            f"got {spec.grad_source!r}")
+    unknown = set(spec.state_fields) - set(STATE_FIELDS)
+    if unknown:
+        bad(f"unknown state_fields {sorted(unknown)}; "
+            f"valid: {STATE_FIELDS}")
+    if spec.grad_source == "stale" and (
+            "g_prev" not in spec.state_fields or not spec.updates_g_prev):
+        bad("grad_source='stale' requires 'g_prev' in state_fields and "
+            "updates_g_prev=True (something must refresh the stale "
+            "gradient)")
+    if spec.updates_g_prev and not spec.local_grad:
+        bad("updates_g_prev=True requires local_grad=True (the refresh "
+            "aggregates the solve phase's local gradients)")
+    if spec.updates_g_prev and "g_prev" not in spec.state_fields:
+        bad("updates_g_prev=True requires 'g_prev' in state_fields — "
+            "otherwise the batched/scanned paths drop the refreshed "
+            "gradient the host loop would persist")
+    if "g_prev" in spec.state_fields and not spec.updates_g_prev:
+        bad("'g_prev' state without updates_g_prev=True never changes; "
+            "set updates_g_prev")
+    if spec.grad_source == "fresh" and spec.num_selections == 1:
+        bad("grad_source='fresh' with one selection is ambiguous; use "
+            "num_selections=2 (separate gather/solve) or 0 (full "
+            "participation, one shared pass)")
+    if spec.control_update is not None and \
+            "controls" not in spec.state_fields:
+        bad("control_update requires 'controls' in state_fields")
+    if "controls" in spec.state_fields and spec.control_update is None:
+        bad("'controls' state without a control_update rule never "
+            "changes; declare control_update")
+    if spec.center_update is not None and \
+            "center" not in spec.state_fields:
+        bad("center_update requires 'center' in state_fields")
+    if "center" in spec.state_fields and spec.center_update is None:
+        bad("'center' state without a center_update rule never changes; "
+            "declare center_update")
+    if spec.server_opt is not None and spec.server_opt not in SERVER_OPTS:
+        bad(f"server_opt must be one of {SERVER_OPTS}, "
+            f"got {spec.server_opt!r}")
+    if spec.local_grad and spec.grad_source == "none":
+        bad("local_grad=True with grad_source='none' computes per-device "
+            "gradients nothing consumes")
+
+
+def register_algorithm(spec: AlgorithmSpec, *,
+                       override: bool = False) -> AlgorithmSpec:
+    """Register ``spec`` under ``spec.name``; returns the spec.
+
+    Rejects duplicate names unless ``override=True`` (tests / notebook
+    iteration).  The spec is completeness-checked here so a broken
+    registration fails loudly at import time, not mid-run.
+    """
+    _check_spec(spec)
+    if spec.name in _REGISTRY and not override:
+        raise ValueError(
+            f"algorithm {spec.name!r} is already registered; pass "
+            f"override=True to replace it")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_algorithm(name: str) -> None:
+    """Remove ``name`` from the registry (test cleanup)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_algorithms() -> Tuple[str, ...]:
+    """Sorted names of every registered algorithm — the single source of
+    truth for what ``FederatedConfig.algorithm`` accepts."""
+    return tuple(sorted(_REGISTRY))
+
+
+def algorithm_spec(name: str) -> AlgorithmSpec:
+    """Look up a registered spec; unknown names raise with the full
+    sorted list (the only algorithm validation in the system)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: "
+            f"{', '.join(available_algorithms())}") from None
+
+
+def validate_server_opt(name: str) -> None:
+    if name not in SERVER_OPTS:
+        raise ValueError(
+            f"unknown server_opt {name!r}; choose from "
+            f"{', '.join(SERVER_OPTS)}")
+
+
+def make_server_opt(spec: AlgorithmSpec, cfg):
+    """Resolve the server-side optimizer for (spec, cfg).
+
+    ``spec.server_opt`` (an algorithm-defined optimizer, e.g. FedAvgM's
+    momentum) wins over ``cfg.server_opt``.  Returns ``None`` for plain
+    SGD at ``server_lr == 1.0`` — i.e. exactly Alg. 1/2's unmodified
+    averaging — so the default path skips the optimizer entirely and
+    stays bit-identical to pre-strategy behavior.
+    """
+    name = spec.server_opt or cfg.server_opt
+    validate_server_opt(name)
+    if name == "sgd" and float(cfg.server_lr) == 1.0:
+        return None
+    from repro.optim import optimizers  # lazy: avoid import cycles
+    if name == "sgd":
+        return optimizers.sgd(cfg.server_lr)
+    if name == "momentum":
+        return optimizers.momentum(cfg.server_lr, cfg.server_momentum)
+    return optimizers.adam(cfg.server_lr)
+
+
+def runtime_state_fields(spec: AlgorithmSpec, cfg) -> Tuple[str, ...]:
+    """The state fields a run of (spec, cfg) actually carries: the
+    spec's declared fields plus ``"opt"`` when the resolved server
+    optimizer is non-trivial (config-dependent, so not spec-static)."""
+    fields = list(spec.state_fields)
+    if make_server_opt(spec, cfg) is not None:
+        fields.append("opt")
+    return tuple(fields)
+
+
+def init_aux(spec: AlgorithmSpec, cfg, params, num_devices: int,
+             *, stacked: bool) -> Dict[str, Any]:
+    """Initial persistent state for (spec, cfg) as a dict.
+
+    ``stacked=True`` lays controls out as one ``(N, ...)`` stacked
+    pytree (batched / scanned paths); ``stacked=False`` as a list of N
+    per-device pytrees (host loop).  ``center`` starts as a *copy* of
+    ``params`` so donation of round state never invalidates the
+    caller's initial-parameter buffers.
+    """
+    aux: Dict[str, Any] = {}
+    for f in runtime_state_fields(spec, cfg):
+        if f == "g_prev":
+            aux["g_prev"] = pt.zeros_like(params)
+        elif f == "center":
+            aux["center"] = jax.tree_util.tree_map(jnp.copy, params)
+        elif f == "controls":
+            aux["c_server"] = pt.zeros_like(params)
+            if stacked:
+                aux["controls"] = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((num_devices,) + x.shape, x.dtype),
+                    params)
+            else:
+                aux["controls"] = [pt.zeros_like(params)
+                                   for _ in range(num_devices)]
+        elif f == "opt":
+            aux["opt"] = make_server_opt(spec, cfg).init(params)
+    return aux

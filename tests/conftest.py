@@ -1,4 +1,5 @@
 import jax
+import numpy as np
 import pytest
 
 # Smoke tests and benches run on the single real CPU device; ONLY
@@ -8,3 +9,11 @@ import pytest
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+def leaves_allclose(a, b, atol):
+    """Leaf-wise pytree comparison shared by the parity suites
+    (test_engine / test_scan_driver / test_strategy)."""
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)

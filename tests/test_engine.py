@@ -8,6 +8,7 @@ path.  These tests pin that contract at atol 1e-5.
 import jax
 import numpy as np
 import pytest
+from conftest import leaves_allclose as _leaves_allclose
 
 from repro.configs.base import FederatedConfig
 from repro.core import (FederatedTrainer, make_batched_grad_fn,
@@ -19,7 +20,8 @@ from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
 
 ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
-         "feddane_pipelined", "feddane_decayed", "scaffold"]
+         "feddane_pipelined", "feddane_decayed", "scaffold",
+         "fedavgm", "sdane"]
 
 
 @pytest.fixture(scope="module")
@@ -27,12 +29,6 @@ def setup():
     ds = make_synthetic(0.5, 0.5, num_devices=8, seed=2)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
     return ds, params
-
-
-def _leaves_allclose(a, b, atol):
-    for x, y in zip(jax.tree_util.tree_leaves(a),
-                    jax.tree_util.tree_leaves(b)):
-        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
 
 
 @pytest.mark.parametrize("algo", ALGOS)
@@ -60,6 +56,10 @@ def test_engine_parity_per_algorithm(setup, algo):
         _leaves_allclose(lo.c_server, ba.c_server, atol=1e-5)
         for ck_l, ck_b in zip(lo.controls, ba.controls):
             _leaves_allclose(ck_l, ck_b, atol=1e-5)
+    if algo == "sdane":
+        _leaves_allclose(lo.center, ba.center, atol=1e-5)
+    if algo == "fedavgm":
+        _leaves_allclose(lo.opt_state, ba.opt_state, atol=1e-5)
 
 
 def test_batched_solver_matches_scalar_solver(setup):

@@ -17,6 +17,7 @@ import os
 import jax
 import numpy as np
 import pytest
+from conftest import leaves_allclose as _leaves_allclose
 
 from repro.configs.base import FederatedConfig
 from repro.core import FederatedTrainer, ScannedDriver, make_scanned_run
@@ -25,7 +26,8 @@ from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
 
 ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
-         "feddane_pipelined", "feddane_decayed", "scaffold"]
+         "feddane_pipelined", "feddane_decayed", "scaffold",
+         "fedavgm", "sdane"]
 NUM_ROUNDS = 6
 
 BASE_KW = dict(num_devices=8, devices_per_round=4, local_epochs=2,
@@ -42,12 +44,6 @@ def setup():
         np.stack([rng.choice(8, 4, replace=False) for _ in range(2)])
         for _ in range(NUM_ROUNDS)])
     return ds, params, sel
-
-
-def _leaves_allclose(a, b, atol):
-    for x, y in zip(jax.tree_util.tree_leaves(a),
-                    jax.tree_util.tree_leaves(b)):
-        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
 
 
 def _run(ds, params, sel, algo, driver, checkpoint_dir=None, **over):

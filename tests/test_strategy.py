@@ -1,0 +1,289 @@
+"""The algorithm-strategy registry (core/strategies).
+
+Pinned contracts:
+
+1. Registration round-trip, duplicate rejection, and completeness
+   checks at registration time.
+2. ``FederatedConfig.algorithm`` is validated against the registry at
+   construction; unknown names raise with the full sorted list.
+3. EVERY registered algorithm runs under all three execution paths
+   (host loop, batched engine, scanned driver) from its spec alone —
+   one parametrized test, so a newly registered spec is exercised with
+   zero test changes.
+4. Reduction identities for the new strategies: fedavgm at zero server
+   momentum is fedavg; sdane at center_lr=1 is feddane.
+5. ``server_opt`` plugs repro.optim in server-side for any algorithm.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from conftest import leaves_allclose as _leaves_allclose
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer, TWO_ROUND_ALGOS
+from repro.core import pytree as pt
+from repro.core.strategies import (AlgorithmSpec, algorithm_spec,
+                                   available_algorithms,
+                                   register_algorithm,
+                                   runtime_state_fields,
+                                   unregister_algorithm)
+from repro.core.strategies.builtin import FEDAVG, FEDPROX
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+BASE_KW = dict(num_devices=6, devices_per_round=3, local_epochs=1,
+               learning_rate=0.05, mu=0.01, seed=5, correction_decay=0.9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=6, seed=4)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _run(ds, params, algo, engine, driver, num_rounds=2, sel=None, **over):
+    kw = dict(BASE_KW, algorithm=algo, engine=engine, round_driver=driver,
+              chunk_rounds=2)
+    kw.update(over)
+    tr = FederatedTrainer(logreg_loss, ds, FederatedConfig(**kw))
+    return tr.run(params, num_rounds, eval_every=1, selections=sel)
+
+
+# -- registry mechanics -----------------------------------------------------
+
+def test_registration_roundtrip():
+    spec = dataclasses.replace(FEDAVG, name="unit_dummy",
+                               summary="test-only clone of fedavg")
+    try:
+        assert register_algorithm(spec) is spec
+        assert algorithm_spec("unit_dummy") is spec
+        assert "unit_dummy" in available_algorithms()
+    finally:
+        unregister_algorithm("unit_dummy")
+    assert "unit_dummy" not in available_algorithms()
+
+
+def test_duplicate_name_rejected():
+    spec = dataclasses.replace(FEDPROX, name="unit_dup", summary="v1")
+    try:
+        register_algorithm(spec)
+        with pytest.raises(ValueError, match="already registered"):
+            register_algorithm(dataclasses.replace(spec, summary="v2"))
+        # explicit override is the escape hatch
+        v2 = register_algorithm(dataclasses.replace(spec, summary="v2"),
+                                override=True)
+        assert algorithm_spec("unit_dup") is v2
+    finally:
+        unregister_algorithm("unit_dup")
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(grad_source="warp"), "grad_source"),
+    (dict(num_selections=3), "num_selections"),
+    (dict(comm_per_round=0), "comm_per_round"),
+    (dict(state_fields=("flux_capacitor",)), "unknown state_fields"),
+    (dict(grad_source="stale", local_grad=True), "stale"),
+    (dict(grad_source="fresh", num_selections=2, local_grad=True,
+          updates_g_prev=True), "g_prev"),
+    (dict(state_fields=("g_prev",)), "g_prev"),
+    (dict(control_update=lambda ctx: ctx.c_local), "controls"),
+    (dict(state_fields=("center",)), "center"),
+    (dict(grad_source="fresh", local_grad=True, num_selections=1),
+     "ambiguous"),
+])
+def test_incomplete_specs_rejected_at_registration(bad, match):
+    spec = dataclasses.replace(
+        AlgorithmSpec(name="unit_bad", summary="incomplete",
+                      comm_per_round=1, num_selections=1), **bad)
+    with pytest.raises(ValueError, match=match):
+        register_algorithm(spec)
+    assert "unit_bad" not in available_algorithms()
+
+
+def test_unknown_algorithm_raises_with_sorted_list():
+    with pytest.raises(ValueError) as e:
+        FederatedConfig(algorithm="fedsgd_typo")
+    msg = str(e.value)
+    assert "fedsgd_typo" in msg
+    for name in available_algorithms():
+        assert name in msg          # the full registry is in the error
+
+
+def test_unknown_server_opt_rejected_at_construction():
+    with pytest.raises(ValueError, match="server_opt"):
+        FederatedConfig(server_opt="lbfgs")
+
+
+def test_two_round_set_derived_from_registry():
+    assert TWO_ROUND_ALGOS == {"feddane", "inexact_dane",
+                               "feddane_decayed", "sdane"}
+
+
+def test_runtime_state_fields_include_server_opt():
+    cfg = FederatedConfig(algorithm="fedavg")
+    assert "opt" not in runtime_state_fields(algorithm_spec("fedavg"), cfg)
+    cfg_m = FederatedConfig(algorithm="fedavg", server_opt="momentum")
+    assert "opt" in runtime_state_fields(algorithm_spec("fedavg"), cfg_m)
+    # fedavgm forces its server optimizer regardless of cfg
+    assert "opt" in runtime_state_fields(algorithm_spec("fedavgm"), cfg)
+
+
+# -- every registered algorithm runs under all three paths ------------------
+
+@pytest.mark.parametrize("algo", available_algorithms())
+@pytest.mark.parametrize("engine, driver", [
+    ("loop", "python"), ("batched", "python"), ("batched", "scan")])
+def test_every_algorithm_runs_all_three_paths(setup, algo, engine, driver):
+    """Spec completeness in practice: 2 rounds on a tiny synthetic set,
+    finite history, for every registered algorithm under the host loop,
+    the batched engine, and the scanned driver."""
+    ds, params = setup
+    hist, p = _run(ds, params, algo, engine, driver)
+    assert len(hist["loss"]) == 2
+    assert np.isfinite(hist["loss"]).all()
+    spec = algorithm_spec(algo)
+    assert hist["comm_rounds"][-1] == 2 * spec.comm_per_round
+    for leaf in jax.tree_util.tree_leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_registered_spec_runs_everywhere_without_other_changes(setup):
+    """Extensibility proof: register a brand-new algorithm here and run
+    it under all three paths with no trainer/engine/driver change."""
+    ds, params = setup
+    spec = dataclasses.replace(
+        algorithm_spec("feddane"), name="unit_halfdane",
+        summary="feddane with a half-strength gradient correction",
+        correction=lambda ctx: pt.scale(
+            pt.sub(ctx.g_global, ctx.g_local), 0.5 * ctx.decay))
+    register_algorithm(spec)
+    try:
+        results = [
+            _run(ds, params, "unit_halfdane", engine, driver)
+            for engine, driver in [("loop", "python"),
+                                   ("batched", "python"),
+                                   ("batched", "scan")]]
+        for hist, _ in results:
+            assert np.isfinite(hist["loss"]).all()
+        # and the three paths agree on it, like any built-in
+        sel = np.stack([np.stack([np.random.default_rng(21)
+                                  .choice(6, 3, replace=False)
+                                  for _ in range(2)])
+                        for _ in range(2)])
+        ref = [_run(ds, params, "unit_halfdane", engine, driver, sel=sel)
+               for engine, driver in [("loop", "python"),
+                                      ("batched", "scan")]]
+        np.testing.assert_allclose(ref[0][0]["loss"], ref[1][0]["loss"],
+                                   atol=1e-5)
+        _leaves_allclose(ref[0][1], ref[1][1], atol=1e-5)
+    finally:
+        unregister_algorithm("unit_halfdane")
+
+
+def test_full_participation_control_spec_runs_all_paths(setup):
+    """Regression: a registered control-variate spec with
+    num_selections=0 (full-participation SCAFFOLD variant) must gather /
+    scatter controls for ALL devices under the scan driver too, and the
+    three paths must agree."""
+    ds, params = setup
+    spec = dataclasses.replace(
+        algorithm_spec("scaffold"), name="unit_fullscaffold",
+        summary="scaffold at full participation", num_selections=0)
+    register_algorithm(spec)
+    try:
+        runs = [_run(ds, params, "unit_fullscaffold", engine, driver)
+                for engine, driver in [("loop", "python"),
+                                       ("batched", "python"),
+                                       ("batched", "scan")]]
+        (h0, p0) = runs[0]
+        assert np.isfinite(h0["loss"]).all()
+        for h, p in runs[1:]:
+            np.testing.assert_allclose(h0["loss"], h["loss"], atol=1e-5)
+            _leaves_allclose(p0, p, atol=1e-5)
+    finally:
+        unregister_algorithm("unit_fullscaffold")
+
+
+# -- reduction identities for the new strategies ----------------------------
+
+def test_fedavgm_with_zero_momentum_is_fedavg(setup):
+    """Server momentum with beta=0 and server_lr=1 applies exactly the
+    raw pseudo-gradient: fedavgm must reproduce fedavg."""
+    ds, params = setup
+    sel = np.stack([np.random.default_rng(3).choice(6, 3, replace=False)
+                    for _ in range(3)])
+    h_avg, p_avg = _run(ds, params, "fedavg", "loop", "python",
+                        num_rounds=3, sel=sel)
+    h_m, p_m = _run(ds, params, "fedavgm", "loop", "python",
+                    num_rounds=3, sel=sel, server_momentum=0.0,
+                    server_lr=1.0)
+    np.testing.assert_allclose(h_avg["loss"], h_m["loss"], atol=1e-6)
+    _leaves_allclose(p_avg, p_m, atol=1e-6)
+
+
+def test_sdane_with_unit_center_lr_is_feddane(setup):
+    """center_lr=1.0 makes the auxiliary center track w^t exactly, so
+    the anchor shift mu (w0 - v) vanishes: sdane must equal feddane."""
+    ds, params = setup
+    rng = np.random.default_rng(9)
+    sel = np.stack([
+        np.stack([rng.choice(6, 3, replace=False) for _ in range(2)])
+        for _ in range(3)])
+    h_d, p_d = _run(ds, params, "feddane", "loop", "python",
+                    num_rounds=3, sel=sel)
+    h_s, p_s = _run(ds, params, "sdane", "loop", "python",
+                    num_rounds=3, sel=sel, center_lr=1.0)
+    np.testing.assert_allclose(h_d["loss"], h_s["loss"], atol=1e-6)
+    _leaves_allclose(p_d, p_s, atol=1e-6)
+
+
+def test_sdane_center_state_evolves(setup):
+    ds, params = setup
+    cfg = FederatedConfig(algorithm="sdane", engine="loop", **BASE_KW)
+    tr = FederatedTrainer(logreg_loss, ds, cfg)
+    st = tr.init(params)
+    _leaves_allclose(st.center, params, atol=0)     # v^0 = w^0
+    st = tr.round(st)
+    # after one round v^1 = v^0 + center_lr (w^1 - v^0), strictly
+    # between the old center and the new params
+    mid = jax.tree_util.tree_map(
+        lambda v0, w1: v0 + cfg.center_lr * (w1 - v0), params, st.params)
+    _leaves_allclose(st.center, mid, atol=1e-6)
+
+
+# -- server-side optimizers on arbitrary algorithms -------------------------
+
+@pytest.mark.parametrize("server_opt", ["momentum", "adam"])
+def test_server_opt_changes_trajectory_and_stays_finite(setup, server_opt):
+    ds, params = setup
+    sel = np.stack([np.random.default_rng(7).choice(6, 3, replace=False)
+                    for _ in range(3)])
+    h_plain, _ = _run(ds, params, "fedprox", "loop", "python",
+                      num_rounds=3, sel=sel)
+    h_opt, _ = _run(ds, params, "fedprox", "loop", "python",
+                    num_rounds=3, sel=sel, server_opt=server_opt,
+                    server_lr=0.1)
+    assert np.isfinite(h_opt["loss"]).all()
+    diff = max(abs(a - b) for a, b in zip(h_plain["loss"], h_opt["loss"]))
+    assert diff > 1e-7              # the server optimizer actually acts
+
+
+def test_server_opt_parity_across_paths(setup):
+    """A config-level server optimizer (not spec-forced) must agree
+    between loop, batched, and scanned execution."""
+    ds, params = setup
+    sel = np.stack([np.random.default_rng(13).choice(6, 3, replace=False)
+                    for _ in range(3)])
+    runs = [_run(ds, params, "fedprox", engine, driver, num_rounds=3,
+                 sel=sel, server_opt="adam", server_lr=0.1)
+            for engine, driver in [("loop", "python"),
+                                   ("batched", "python"),
+                                   ("batched", "scan")]]
+    (h0, p0) = runs[0]
+    for h, p in runs[1:]:
+        np.testing.assert_allclose(h0["loss"], h["loss"], atol=1e-5)
+        _leaves_allclose(p0, p, atol=1e-5)
