@@ -23,23 +23,33 @@ def run_algo(algo: str, loss_fn, dataset, specs, *, mu: float = 0.0,
              num_rounds: int = 10, devices_per_round: int = 10,
              local_epochs: int = 5, lr: float = 0.01, seed: int = 1,
              eval_every: int = 1000, correction_decay: float = 1.0,
-             num_devices=None) -> Dict:
+             num_devices=None, **cfg_extra) -> Dict:
+    """Run one (algorithm, dataset) cell; extra keyword args go straight
+    into ``FederatedConfig`` (scenario knobs, drivers, server opts...).
+    The result carries the per-round participation telemetry the
+    scenario layer realized (mean effective K, total dropped)."""
     cfg = FederatedConfig(
         algorithm=algo, num_devices=num_devices or dataset.num_devices,
         devices_per_round=devices_per_round, local_epochs=local_epochs,
         learning_rate=lr, mu=mu, seed=seed,
-        correction_decay=correction_decay)
+        correction_decay=correction_decay, **cfg_extra)
     tr = FederatedTrainer(loss_fn, dataset, cfg)
     params = init_params(specs, jax.random.PRNGKey(0))
     st = tr.init(params)
     t0 = time.time()
     losses = [tr.global_loss(params)]
+    eff_k, dropped = [], 0.0
     for t in range(num_rounds):
         st = tr.round(st)
+        intended, eff = tr.last_env
+        eff_k.append(eff)
+        dropped += intended - eff
         if (t + 1) % eval_every == 0 or t == num_rounds - 1:
             losses.append(tr.global_loss(st.params))
     return {"algo": algo, "losses": losses, "final": losses[-1],
             "initial": losses[0], "comm_rounds": st.comm_rounds,
+            "effective_k_mean": sum(eff_k) / max(len(eff_k), 1),
+            "dropped_total": dropped,
             "wall_s": time.time() - t0}
 
 

@@ -146,6 +146,28 @@ def smoke():
             rows.append({"name": name, "wall_s": wall,
                          "rounds": 2, "backend": jax.default_backend(),
                          "final_loss": float(hist["loss"][-1])})
+    # scenario smoke: one straggler environment per driver, so a
+    # scenario-layer regression on the masked/env round programs fails
+    # CI the same way a broken spec does
+    for driver in ("python", "scan"):
+        cfg = FederatedConfig(
+            algorithm="feddane", num_devices=8, devices_per_round=4,
+            local_epochs=1, local_batch_size=10, learning_rate=0.01,
+            mu=0.001, seed=1, round_driver=driver, chunk_rounds=2,
+            scenario="stragglers", straggler_deadline=1.2)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, 2, eval_every=1)
+        jax.block_until_ready(final)
+        name = f"bench_smoke_scenario_stragglers_{driver}"
+        assert np.isfinite(hist["loss"]).all(), f"{name}: non-finite loss"
+        assert all(e <= i for e, i in zip(hist["effective_k"],
+                                          hist["intended_k"])), \
+            f"{name}: effective K exceeded intended K"
+        rows.append({"name": name, "wall_s": time.time() - t0,
+                     "rounds": 2, "backend": jax.default_backend(),
+                     "final_loss": float(hist["loss"][-1]),
+                     "effective_k": hist["effective_k"]})
     return rows
 
 

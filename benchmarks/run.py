@@ -26,10 +26,14 @@ def smoke(out_path: str) -> None:
     assert rows, "smoke benchmark produced no rows"
     with open(out_path, "w") as f:
         json.dump({"total_wall_s": wall, "rows": rows}, f, indent=2)
+    scenario_rows = [r for r in rows
+                     if r["name"].startswith("bench_smoke_scenario_")]
     algos = sorted({r["name"].replace("bench_smoke_", "")
-                    .rsplit("_", 1)[0] for r in rows})
+                    .rsplit("_", 1)[0] for r in rows
+                    if r not in scenario_rows})
     print(f"bench_smoke,{wall * 1e6:.0f},"
-          f"algos={len(algos)}({'+'.join(algos)}) runs={len(rows)} "
+          f"algos={len(algos)}({'+'.join(algos)}) "
+          f"scenario_runs={len(scenario_rows)} runs={len(rows)} "
           f"rounds={rows[0]['rounds']} "
           f"backend={rows[0]['backend']} out={out_path} ok")
 

@@ -1,0 +1,72 @@
+"""Beyond-paper example: the same algorithms under hostile federated
+environments.
+
+The paper's empirical point is that FedDANE's aggregated-gradient
+correction is fragile to low *effective* participation.  The scenario
+layer (``repro.core.scenarios``) lets you turn that knob the way real
+deployments do: flaky device availability, straggler deadlines (drop or
+accept-partial), mid-round dropout, and device-dependent partial work —
+each ONE registered ``ScenarioSpec``, interpreted by all three
+execution paths, with per-round participation telemetry in the run
+history.
+
+  PYTHONPATH=src python examples/scenario_stress.py
+"""
+import jax
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ENVIRONMENTS = [
+    ("ideal", dict()),
+    ("bernoulli", dict(avail_prob=0.5)),
+    ("stragglers", dict(straggler_deadline=0.9, straggler_sigma=0.75)),
+    ("stragglers_partial", dict(straggler_deadline=0.9,
+                                straggler_sigma=0.75)),
+    ("dropout", dict(dropout_rate=0.3)),
+    ("partial_work", dict(partial_min_work=0.3)),
+    ("hostile", dict(avail_prob=0.7, dropout_rate=0.2,
+                     straggler_deadline=1.5, partial_min_work=0.5)),
+]
+ALGOS = [("fedavg", 0.0), ("fedprox", 1.0), ("feddane", 0.001)]
+
+
+def run_env(dataset, params0, algo, mu, scenario, kw):
+    cfg = FederatedConfig(algorithm=algo, devices_per_round=10,
+                          local_epochs=5, learning_rate=0.01, mu=mu,
+                          seed=1, scenario=scenario, **kw)
+    tr = FederatedTrainer(logreg_loss, dataset, cfg)
+    hist, _ = tr.run(params0, num_rounds=15, eval_every=15)
+    eff = sum(hist["effective_k"]) / len(hist["effective_k"])
+    return hist["loss"][-1], eff, sum(hist["dropped"])
+
+
+def main():
+    dataset = make_synthetic(1, 1, num_devices=30, seed=0)
+    params0 = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    header = f"{'environment':20s}" + "".join(
+        f" {algo:>9s}" for algo, _ in ALGOS) + \
+        f" {'eff K':>6s} {'dropped':>8s}"
+    print(header)
+    for scenario, kw in ENVIRONMENTS:
+        finals = []
+        for algo, mu in ALGOS:
+            loss, eff, dropped = run_env(dataset, params0, algo, mu,
+                                         scenario, kw)
+            finals.append(loss)
+        print(f"{scenario:20s}" + "".join(
+            f" {loss:>9.4f}" for loss in finals) +
+            f" {eff:>6.1f} {dropped:>8.0f}")
+    print("\nStragglers under a tight deadline and flaky availability "
+          "shrink the round's EFFECTIVE K; FedDANE's correction is "
+          "estimated from that same thin selection, so it degrades "
+          "faster than FedAvg/FedProx — the paper's §V finding, now "
+          "reproducible as registered environment scenarios "
+          "(cfg.scenario) rather than hand-edited K.")
+
+
+if __name__ == "__main__":
+    main()

@@ -209,13 +209,48 @@ class FederatedConfig:
     # rounds fused per scanned-driver dispatch; checkpoints / verbose
     # printing happen at chunk boundaries (0 -> one chunk per run)
     chunk_rounds: int = 32
+    # federated environment (core/scenarios.py): any registered
+    # ScenarioSpec name.  "ideal" (always-on devices, no stragglers,
+    # full work) is structurally a no-op — every path keeps its exact
+    # pre-scenario code, bit-identical numerics (tests/test_scenarios.py
+    # pins this against tests/golden/).
+    scenario: str = "ideal"
+    # -- scenario knobs (consumed by whichever spec declares the
+    #    corresponding component; inert otherwise) --
+    avail_prob: float = 0.9          # bernoulli/diurnal mean availability
+    diurnal_period: int = 8          # rounds per day/night cycle
+    straggler_sigma: float = 0.5     # lognormal latency sigma (median 1)
+    straggler_deadline: float = 2.0  # server timeout, in nominal rounds
+    dropout_rate: float = 0.1        # P(mid-round dropout) per device
+    partial_min_work: float = 0.5    # slowest device's work fraction
 
     def __post_init__(self):
-        # Registry-backed validation: the algorithm-strategy registry is
-        # the only list of valid names (imported lazily — configs is a
-        # leaf layer).  engine / round_driver stay late-validated by the
-        # trainer, which owns their backend-dependent resolution.
+        # Registry-backed validation: the algorithm-strategy and
+        # scenario registries are the only lists of valid names
+        # (imported lazily — configs is a leaf layer).  engine /
+        # round_driver stay late-validated by the trainer, which owns
+        # their backend-dependent resolution.
+        from repro.core.scenarios import scenario_spec
         from repro.core.strategies import (algorithm_spec,
                                            validate_server_opt)
         algorithm_spec(self.algorithm)
         validate_server_opt(self.server_opt)
+        scenario_spec(self.scenario)
+        if not 0.0 < self.avail_prob <= 1.0:
+            raise ValueError(
+                f"avail_prob must be in (0, 1], got {self.avail_prob}")
+        if self.diurnal_period < 1:
+            raise ValueError(
+                f"diurnal_period must be >= 1, got {self.diurnal_period}")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(
+                f"dropout_rate must be in [0, 1), got {self.dropout_rate}")
+        if self.straggler_sigma < 0.0 or self.straggler_deadline <= 0.0:
+            raise ValueError(
+                f"straggler_sigma must be >= 0 and straggler_deadline "
+                f"> 0, got {self.straggler_sigma}/"
+                f"{self.straggler_deadline}")
+        if not 0.0 < self.partial_min_work <= 1.0:
+            raise ValueError(
+                f"partial_min_work must be in (0, 1], got "
+                f"{self.partial_min_work}")

@@ -6,6 +6,8 @@ from repro.core.client import (LocalResult, gamma_inexactness,
                                make_exact_solver, make_grad_fn,
                                make_local_solver)
 from repro.core.engine import RoundEngine, ScannedDriver, make_scanned_run
+from repro.core.scenarios import (ScenarioSpec, available_scenarios,
+                                  register_scenario, scenario_spec)
 from repro.core.strategies import (AlgorithmSpec, algorithm_spec,
                                    available_algorithms,
                                    register_algorithm)
@@ -17,6 +19,8 @@ __all__ = [
     "ScannedDriver", "make_scanned_run",
     "AlgorithmSpec", "register_algorithm", "algorithm_spec",
     "available_algorithms",
+    "ScenarioSpec", "register_scenario", "scenario_spec",
+    "available_scenarios",
     "make_local_solver", "make_grad_fn", "make_exact_solver",
     "make_batched_solver", "make_batched_grad_fn",
     "gamma_inexactness", "LocalResult",

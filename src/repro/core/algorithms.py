@@ -32,6 +32,19 @@ Sampling happens identically (same rng stream) under both engines, so a
 fixed seed yields the same device selections and — to float-accumulation
 order — the same trajectory.
 
+Orthogonally to algorithm and engine, ``FederatedConfig.scenario``
+selects a registered federated-environment
+:class:`~repro.core.scenarios.ScenarioSpec` (availability processes,
+straggler deadlines, mid-round dropout, partial-work clients).  The
+trainer realizes the environment once per round — an ``active``
+participation mask and per-device ``work`` fractions for the solve
+selection, plus an availability mask over the gradient-gather
+selection (offline devices serve neither phase) — and hands it to
+whichever engine runs the round; run histories carry the per-round
+``intended_k`` / ``effective_k`` / ``dropped`` telemetry.  The default ``"ideal"`` scenario is
+structurally a no-op: every path keeps its exact pre-scenario program
+(pinned bit-exact by tests/test_scenarios.py).
+
 Orthogonally to the per-round engine, ``FederatedConfig.round_driver``
 selects how ``run()`` drives the *round loop*:
 
@@ -60,6 +73,8 @@ from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_grad_fn, make_local_solver
 from repro.core.engine import RoundEngine, ScannedDriver
+from repro.core.scenarios import (availability_mask, env_channels,
+                                  is_trivial, realize_env, scenario_spec)
 from repro.core.strategies import (ControlCtx, CorrCtx, algorithm_spec,
                                    available_algorithms, init_aux,
                                    make_server_opt, runtime_state_fields)
@@ -106,10 +121,20 @@ class FederatedTrainer:
         self.cfg = cfg
         self.eval_fn = eval_fn
         self.spec = algorithm_spec(cfg.algorithm)
+        # federated-environment scenario (core/scenarios): the trivial
+        # "ideal" spec keeps every code path below exactly pre-scenario
+        # (no env draws, no masks — bit-identical numerics)
+        self.scn = scenario_spec(cfg.scenario)
+        self._scn_trivial = is_trivial(self.scn)
+        self._env_channels = env_channels(self.scn)
+        #: (intended K, effective K) of the most recent round — the
+        #: participation telemetry ``run()`` folds into its history
+        self.last_env: Optional[Tuple[int, float]] = None
         self.rng = np.random.default_rng(cfg.seed)
         self.solver = make_local_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
+        self._solver_cut = None       # cutoff variant, built on demand
         self.grad_fn = make_grad_fn(loss_fn)
         self._server_opt = make_server_opt(self.spec, cfg)
         self._state_fields = runtime_state_fields(self.spec, cfg)
@@ -234,44 +259,112 @@ class FederatedTrainer:
             S1, S2 = self._sample(), self._sample()
         shared = S1 is S2 and spec.grad_source == "fresh"
 
+        # Realize the environment for the solve selection: the scenario
+        # interpreter maps host-drawn uniforms (one per-DEVICE (N,)
+        # draw per declared channel, fixed order — duplicate selections
+        # share one outcome) to the round's participation mask and work
+        # fractions.  Ideal realizes nothing — the rng stream and every
+        # downstream op stay exactly pre-scenario.
+        active = work = active_a = None
+        if not self._scn_trivial:
+            uniforms = {c: jax.numpy.asarray(
+                self.rng.random(self.dataset.num_devices),
+                jax.numpy.float32)
+                for c in self._env_channels}
+            env = realize_env(self.scn, cfg, self.dataset.num_devices,
+                              jax.numpy.asarray(S2), st.round, uniforms)
+            active, work = env.active, env.work
+            if spec.grad_source == "fresh":
+                # availability gates phase A too (same per-device
+                # draws): offline devices serve no gradient either
+                active_a = availability_mask(
+                    self.scn, cfg, self.dataset.num_devices,
+                    jax.numpy.asarray(S1), st.round, uniforms)
+            self.last_env = (len(S2), float(np.asarray(active).sum()))
+        else:
+            self.last_env = (len(S2), float(len(S2)))
+
         if eng is not None:
             b, v = self._stack(S2)
             phase_a = (self._stack(S1)
                        if spec.grad_source == "fresh" and not shared
                        else None)
             aux = self._gather_aux(st, S2)
-            st.params, aux_new = eng.round(w0, aux, phase_a, b, v, decay)
+            if active is None:
+                st.params, aux_new = eng.round(w0, aux, phase_a, b, v,
+                                               decay)
+            else:
+                st.params, aux_new, _ = eng.round_env(
+                    w0, aux, phase_a, b, v, decay, active, work,
+                    active_a)
             self._scatter_aux(st, aux_new, S2)
         else:
-            self._loop_round(st, S1, S2, mu, decay)
+            self._loop_round(st, S1, S2, mu, decay,
+                             active=(None if active is None
+                                     else np.asarray(active) > 0),
+                             work=(None if work is None
+                                   else np.asarray(work)),
+                             avail_a=(None if active_a is None
+                                      else np.asarray(active_a) > 0))
 
         st.comm_rounds += spec.comm_per_round
         st.round += 1
         return st
 
-    def _loop_round(self, st: FederatedState, S1, S2, mu,
-                    decay) -> None:
+    def _solve_partial(self, w0, corr, mu, bk, limit: int):
+        """Local solve truncated to ``limit`` SGD steps (partial-work /
+        accept-partial-straggler devices); the cutoff solver is built on
+        first use so the ideal environment never pays for it."""
+        if self._solver_cut is None:
+            self._solver_cut = make_local_solver(
+                self.loss_fn, learning_rate=self.cfg.learning_rate,
+                num_epochs=self.cfg.local_epochs, with_cutoff=True)
+        return self._solver_cut(w0, corr, mu, bk, jax.numpy.int32(limit))
+
+    def _loop_round(self, st: FederatedState, S1, S2, mu, decay,
+                    active=None, work=None, avail_a=None) -> None:
         """Per-device reference interpretation of the spec: one jitted
-        solver/grad dispatch per device, plain pytree-op aggregation."""
+        solver/grad dispatch per device, plain pytree-op aggregation.
+
+        ``active``/``work``/``avail_a`` (the realized environment, None
+        under the ideal scenario): ``avail_a`` thins the phase-A
+        gradient gather to the available subset of S1 (with NO device
+        available there is no g_t to broadcast — the round runs
+        uncorrected); ``active`` gates the solve phase — inactive
+        devices are skipped outright, no solve, no control/g_prev
+        contribution; partial-work devices stop after
+        ``ceil(work * steps)`` SGD steps.  With no active solve device
+        the round is a no-op (``w_agg = w0``; a server optimizer still
+        sees the zero pseudo-gradient).
+        """
         spec, cfg = self.spec, self.cfg
         w0 = st.params
         zeros = pt.zeros_like(w0)
 
         g_global = None
         if spec.grad_source == "fresh":
-            g_global = server.aggregate_gradients(
-                [self.grad_fn(w0, self._batches(k)) for k in S1])
+            S1_avail = (S1 if avail_a is None
+                        else [k for i, k in enumerate(S1) if avail_a[i]])
+            if len(S1_avail) > 0:
+                g_global = server.aggregate_gradients(
+                    [self.grad_fn(w0, self._batches(k))
+                     for k in S1_avail])
+            # else: no reachable gradient device — no correction this
+            # round (g_global stays None; corr falls back to zeros)
         elif spec.grad_source == "stale":
             g_global = st.g_prev
 
         c0 = st.c_server
         updates, fresh_grads, deltas = [], [], []
-        for k in S2:
+        for i, k in enumerate(S2):
+            if active is not None and not active[i]:
+                continue
             bk = self._batches(k)
             g_local = self.grad_fn(w0, bk) if spec.local_grad else None
             if spec.updates_g_prev:
                 fresh_grads.append(g_local)
-            if spec.correction is not None:
+            if spec.correction is not None and not (
+                    spec.grad_source == "fresh" and g_global is None):
                 corr = spec.correction(CorrCtx(
                     w0=w0, g_global=g_global, g_local=g_local,
                     c_server=c0,
@@ -280,28 +373,34 @@ class FederatedTrainer:
                     center=st.center, mu=mu, decay=decay))
             else:
                 corr = zeros
-            res = self.solver(w0, corr, mu, bk)
+            total = cfg.local_epochs * num_batches_of(bk)
+            nsteps = (min(total, int(np.ceil(work[i] * total)))
+                      if work is not None else total)
+            if nsteps < total:
+                res = self._solve_partial(w0, corr, mu, bk, nsteps)
+            else:
+                res = self.solver(w0, corr, mu, bk)
             updates.append(res.params)
             if spec.control_update is not None:
                 # Karimireddy et al. option II: corrections used the
                 # ROUND-START server control; each duplicate selection
                 # refreshes the device control sequentially.
-                nsteps = cfg.local_epochs * num_batches_of(bk)
                 ck_new = spec.control_update(ControlCtx(
                     c_local=st.controls[int(k)], c_server=c0, w0=w0,
                     w_new=res.params,
-                    inv_steps=1.0 / (nsteps * cfg.learning_rate)))
+                    inv_steps=1.0 / (max(nsteps, 1)
+                                     * cfg.learning_rate)))
                 deltas.append(pt.sub(ck_new, st.controls[int(k)]))
                 st.controls[int(k)] = ck_new
 
-        w_agg = server.aggregate_mean(updates)
-        if spec.control_update is not None:
+        w_agg = server.aggregate_mean(updates) if updates else w0
+        if spec.control_update is not None and deltas:
             # c_server absorbs the (1/N)-scaled correction deltas once,
             # after the loop.
             st.c_server = pt.add(
                 c0, pt.scale(pt.mean(deltas),
                              len(deltas) / self.dataset.num_devices))
-        if spec.updates_g_prev:
+        if spec.updates_g_prev and fresh_grads:
             st.g_prev = server.aggregate_gradients(fresh_grads)
         st.params, st.opt_state = server.server_step(
             w0, w_agg, self._server_opt, st.opt_state)
@@ -329,7 +428,11 @@ class FederatedTrainer:
             verbose: bool = False, checkpoint_dir: Optional[str] = None,
             selections=None) -> Tuple[Dict[str, List[float]], Any]:
         """Run ``num_rounds`` rounds; returns ``(history, final_params)``.
-        ``history`` holds only float lists (round / comm_rounds / loss).
+        ``history`` holds only float lists: ``round`` / ``comm_rounds`` /
+        ``loss`` at eval cadence, plus per-round participation telemetry
+        ``intended_k`` / ``effective_k`` / ``dropped`` (the scenario
+        layer's realized environment; under ``scenario="ideal"`` these
+        are constants K / K / 0).
 
         ``checkpoint_dir``: if set, ``{"params", "round"}`` is saved via
         checkpoint/store.py at every ``cfg.chunk_rounds`` boundary (both
@@ -368,10 +471,15 @@ class FederatedTrainer:
             else num_rounds
         st = self.init(params)
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
-                                        "loss": []}
+                                        "loss": [], "intended_k": [],
+                                        "effective_k": [], "dropped": []}
         try:
             for t in range(num_rounds):
                 st = self.round(st)
+                intended, eff = self.last_env
+                hist["intended_k"].append(float(intended))
+                hist["effective_k"].append(eff)
+                hist["dropped"].append(float(intended) - eff)
                 if t % eval_every == 0 or t == num_rounds - 1:
                     loss = self.global_loss(st.params)
                     hist["round"].append(st.round)

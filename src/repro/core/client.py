@@ -40,7 +40,8 @@ class LocalResult(NamedTuple):
 
 
 def make_local_solver(loss_fn: Callable, *, learning_rate: float,
-                      num_epochs: int) -> Callable:
+                      num_epochs: int,
+                      with_cutoff: bool = False) -> Callable:
     """Build the jitted E-epoch SGD solver for DANE-type subproblems.
 
     The solved objective is
@@ -56,28 +57,45 @@ def make_local_solver(loss_fn: Callable, *, learning_rate: float,
     ``batches``: pytree with leaves (num_batches, batch, ...); per-batch
     loss must already be mask-aware (data layer contract).
     Returns ``solve(w0, corr, mu, batches) -> LocalResult``.
+
+    ``with_cutoff=True`` builds the scenario-layer variant
+    ``solve(w0, corr, mu, batches, max_steps)``: steps at index >=
+    ``max_steps`` (a traced scalar) are identity, modeling a device
+    that stops early (partial work / accept-partial stragglers).  The
+    plain variant stays a separate build so the ideal-environment path
+    keeps its exact pre-scenario program.
     """
 
-    @jax.jit
-    def solve(w0, corr, mu, batches) -> LocalResult:
+    def solve_body(w0, corr, mu, batches, max_steps=None) -> LocalResult:
         grad_fn = jax.grad(loss_fn)
 
-        def batch_step(w, batch):
+        def batch_step(carry, batch):
+            w, step = carry
             g = grad_fn(w, batch)
             g = pt.add(g, corr)
             g = pt.add(g, pt.scale(pt.sub(w, w0), mu))
-            return pt.sub(w, pt.scale(g, learning_rate)), None
+            w_new = pt.sub(w, pt.scale(g, learning_rate))
+            if max_steps is not None:
+                live = step < max_steps
+                w_new = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(live, n, o), w_new, w)
+            return (w_new, step + 1), None
 
-        def epoch(w, _):
-            w, _ = jax.lax.scan(batch_step, w, batches)
-            return w, None
+        def epoch(carry, _):
+            carry, _ = jax.lax.scan(batch_step, carry, batches)
+            return carry, None
 
-        w, _ = jax.lax.scan(epoch, w0, None, length=num_epochs)
+        (w, steps), _ = jax.lax.scan(epoch, (w0, jnp.int32(0)), None,
+                                     length=num_epochs)
         nb = jax.tree_util.tree_leaves(batches)[0].shape[0]
-        return LocalResult(w, pt.sub(w, w0),
-                           jnp.int32(num_epochs * nb))
+        taken = (jnp.minimum(steps, max_steps) if max_steps is not None
+                 else jnp.int32(num_epochs * nb))
+        return LocalResult(w, pt.sub(w, w0), taken)
 
-    return solve
+    if with_cutoff:
+        return jax.jit(solve_body)
+    return jax.jit(lambda w0, corr, mu, batches:
+                   solve_body(w0, corr, mu, batches))
 
 
 def _batch_weight(batch) -> jnp.ndarray:
@@ -89,7 +107,8 @@ def _batch_weight(batch) -> jnp.ndarray:
 
 
 def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
-                        num_epochs: int) -> Callable:
+                        num_epochs: int,
+                        with_cutoff: bool = False) -> Callable:
     """Device-parallel E-epoch SGD solver for DANE-type subproblems.
 
     ``solve(w0, corr, mu, batches, valid) -> LocalResult`` where
@@ -108,36 +127,59 @@ def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
     the device axis and the update is the fused ``dane_update`` kernel
     applied to the device-stacked leaves (interpret on CPU, Mosaic on
     TPU).  Returned leaves keep the leading K axis.
+
+    ``with_cutoff=True`` builds the scenario-layer variant
+    ``solve(w0, corr, mu, batches, valid, steps_limit)`` with a traced
+    ``(K,)`` per-device cap counted in *valid* steps: device k's steps
+    beyond ``steps_limit[k]`` fold into the existing identity-step mask
+    (one extra elementwise predicate, shapes unchanged — trace-static).
+    The valid-step counting makes the cutoff device follow exactly the
+    truncated trajectory the scalar cutoff solver produces, padding
+    batches notwithstanding.
     """
     from repro.kernels import ops as kops
 
     grad_fn = jax.vmap(jax.grad(loss_fn))
 
-    def solve(w0, corr, mu, batches, valid) -> LocalResult:
+    def solve_body(w0, corr, mu, batches, valid,
+                   steps_limit=None) -> LocalResult:
         K = valid.shape[0]
         anchor = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (K,) + x.shape), w0)
 
-        def batch_step(w, xs):
+        def batch_step(carry, xs):
+            w, done = carry
             batch, v = xs                       # leaves (K, b, ...), (K,)
             g = grad_fn(w, batch)
-            return kops.dane_update_masked(
-                w, g, corr, anchor, learning_rate, mu, v), None
+            if steps_limit is not None:
+                m = v * (done < steps_limit)    # cap counts valid steps
+            else:
+                m = v
+            w = kops.dane_update_masked(
+                w, g, corr, anchor, learning_rate, mu, m)
+            return (w, done + v), None
 
         # scan wants the scanned axis leading: (nb, K, batch, ...)
         batches_t = jax.tree_util.tree_map(
             lambda x: jnp.swapaxes(x, 0, 1), batches)
         valid_t = valid.T
 
-        def epoch(w, _):
-            w, _ = jax.lax.scan(batch_step, w, (batches_t, valid_t))
-            return w, None
+        def epoch(carry, _):
+            carry, _ = jax.lax.scan(batch_step, carry,
+                                    (batches_t, valid_t))
+            return carry, None
 
-        w, _ = jax.lax.scan(epoch, anchor, None, length=num_epochs)
-        return LocalResult(w, pt.sub(w, anchor),
-                           (num_epochs * valid.sum(axis=1)).astype(jnp.int32))
+        (w, done), _ = jax.lax.scan(
+            epoch, (anchor, jnp.zeros((K,), jnp.float32)), None,
+            length=num_epochs)
+        taken = (jnp.minimum(done, steps_limit) if steps_limit is not None
+                 else done)
+        return LocalResult(w, pt.sub(w, anchor), taken.astype(jnp.int32))
 
-    return solve
+    if with_cutoff:
+        return solve_body
+    return lambda w0, corr, mu, batches, valid: \
+        solve_body(w0, corr, mu, batches, valid)
 
 
 def make_batched_grad_fn(loss_fn: Callable) -> Callable:

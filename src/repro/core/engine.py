@@ -100,6 +100,8 @@ from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_batched_grad_fn, make_batched_solver
+from repro.core.scenarios import (availability_mask, env_channels,
+                                  is_trivial, realize_env, scenario_spec)
 from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
                                    algorithm_spec, init_aux,
                                    make_server_opt, runtime_state_fields)
@@ -157,13 +159,26 @@ class RoundEngine:
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
+        self._solver_env = make_batched_solver(
+            loss_fn, learning_rate=cfg.learning_rate,
+            num_epochs=cfg.local_epochs, with_cutoff=True)
         self._grads = make_batched_grad_fn(loss_fn)
         self._server_opt = make_server_opt(self.spec, cfg)
         self.round_body = self._make_round_body()
         self.round = jax.jit(self.round_body,
                              donate_argnums=_donate_argnums((1,)))
+        # Scenario-aware variant: same generic spec interpretation with
+        # three extra traced inputs — an `active` (K,) solve
+        # participation mask, a `work` (K,) fraction, and an
+        # `active_a` availability mask over the gradient-gather
+        # selection — and a telemetry dict output.  A separate program
+        # so the ideal environment keeps the exact pre-scenario round
+        # (bit-identical numerics, no extra ops).
+        self.round_body_env = self._make_round_body(with_env=True)
+        self.round_env = jax.jit(self.round_body_env,
+                                 donate_argnums=_donate_argnums((1,)))
 
-    def _make_round_body(self) -> Callable:
+    def _make_round_body(self, with_env: bool = False) -> Callable:
         spec, cfg = self.spec, self.cfg
         mu = cfg.mu if spec.use_mu else 0.0
         opt = self._server_opt
@@ -173,17 +188,30 @@ class RoundEngine:
                 f"RoundEngine needs num_devices")
         n_dev = float(self.num_devices or 0)
 
-        def round_body(w0, aux, phase_a, batches, valid, decay):
+        def round_core(w0, aux, phase_a, batches, valid, decay,
+                       active, work, active_a):
             g_global = g_local = None
+            grad_ok = None
             if spec.grad_source == "fresh":
+                if with_env:
+                    # offline devices serve no gradient either: g_t is
+                    # the masked mean over the AVAILABLE gather
+                    # selection; with none available there is no
+                    # correction to broadcast (grad_ok zeros it below)
+                    zeros = pt.zeros_like(w0)
+                    grad_ok = (active_a.sum() > 0).astype(jnp.float32)
                 if phase_a is None:
                     # shared selection: one gradient pass serves the
                     # gather AND the per-device corrections
                     g_local = self._grads(w0, batches, valid)
-                    g_global = server.aggregate_stacked(g_local)
+                    g_global = (server.aggregate_stacked_masked(
+                        g_local, active_a, zeros) if with_env
+                        else server.aggregate_stacked(g_local))
                 else:
-                    g_global = server.aggregate_stacked(
-                        self._grads(w0, phase_a[0], phase_a[1]))
+                    ga = self._grads(w0, phase_a[0], phase_a[1])
+                    g_global = (server.aggregate_stacked_masked(
+                        ga, active_a, zeros) if with_env
+                        else server.aggregate_stacked(ga))
                     if spec.local_grad:
                         g_local = self._grads(w0, batches, valid)
             elif spec.grad_source == "stale":
@@ -196,26 +224,60 @@ class RoundEngine:
                     c_server=aux.get("c_server"),
                     c_local=aux.get("controls"),
                     center=aux.get("center"), mu=mu, decay=decay))
+                if grad_ok is not None:
+                    # no reachable gradient device -> no broadcast ->
+                    # the round runs uncorrected (fedavg/fedprox step)
+                    corr = jax.tree_util.tree_map(
+                        lambda c: c * grad_ok, corr)
             else:
                 corr = _stack_zeros(w0, valid.shape[0])
-            res = self._solver(w0, corr, mu, batches, valid)
-            w_agg = server.aggregate_stacked(res.params)
+            nsteps = cfg.local_epochs * valid.sum(axis=1)       # (K,)
+            if with_env:
+                # devices stop after ceil(work * total) of their valid
+                # steps — the mask keeps shapes trace-static
+                nsteps = jnp.minimum(jnp.ceil(work * nsteps), nsteps)
+                res = self._solver_env(w0, corr, mu, batches, valid,
+                                       nsteps)
+                w_agg = server.aggregate_stacked_masked(
+                    res.params, active, w0)
+            else:
+                res = self._solver(w0, corr, mu, batches, valid)
+                w_agg = server.aggregate_stacked(res.params)
 
             new = dict(aux)
             if spec.updates_g_prev:
-                new["g_prev"] = server.aggregate_stacked(g_local)
+                new["g_prev"] = (
+                    server.aggregate_stacked_masked(
+                        g_local, active, aux["g_prev"])
+                    if with_env else server.aggregate_stacked(g_local))
             if spec.control_update is not None:
-                nsteps = cfg.local_epochs * valid.sum(axis=1)   # (K,)
                 c_new = spec.control_update(ControlCtx(
                     c_local=aux["controls"], c_server=aux["c_server"],
                     w0=w0, w_new=res.params,
-                    inv_steps=1.0 / (nsteps * cfg.learning_rate)))
-                delta = server.aggregate_stacked(
-                    pt.sub(c_new, aux["controls"]))       # (1/K) sum_k
-                k = jnp.float32(valid.shape[0])
-                new["c_server"] = jax.tree_util.tree_map(
-                    lambda cs, d: cs + d * (k / n_dev),
-                    aux["c_server"], delta)
+                    inv_steps=1.0 / (jnp.maximum(nsteps, 1.0)
+                                     * cfg.learning_rate)))
+                if with_env:
+                    # only devices whose update reached the server
+                    # refresh their control / feed the server control
+                    keep = lambda cn, co: jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(
+                            active.reshape(active.shape
+                                           + (1,) * (n.ndim - 1)) > 0,
+                            n, o), cn, co)
+                    c_new = keep(c_new, aux["controls"])
+                    delta_sum = jax.tree_util.tree_map(
+                        lambda n, o: (n - o).sum(axis=0),
+                        c_new, aux["controls"])
+                    new["c_server"] = jax.tree_util.tree_map(
+                        lambda cs, d: cs + d / n_dev,
+                        aux["c_server"], delta_sum)
+                else:
+                    delta = server.aggregate_stacked(
+                        pt.sub(c_new, aux["controls"]))   # (1/K) sum_k
+                    k = jnp.float32(valid.shape[0])
+                    new["c_server"] = jax.tree_util.tree_map(
+                        lambda cs, d: cs + d * (k / n_dev),
+                        aux["c_server"], delta)
                 new["controls"] = c_new
             w_out, opt_state = server.server_step(
                 w0, w_agg, opt, aux.get("opt"))
@@ -224,9 +286,19 @@ class RoundEngine:
             if spec.center_update is not None:
                 new["center"] = spec.center_update(
                     aux["center"], w_out, cfg)
+            if with_env:
+                k = jnp.float32(valid.shape[0])
+                eff = active.sum()
+                stats = {"intended_k": k, "effective_k": eff,
+                         "dropped": k - eff}
+                return w_out, new, stats
             return w_out, new
 
-        return round_body
+        if with_env:
+            return round_core
+        return lambda w0, aux, phase_a, batches, valid, decay: \
+            round_core(w0, aux, phase_a, batches, valid, decay,
+                       None, None, None)
 
 
 def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
@@ -278,12 +350,28 @@ class ScannedDriver:
             loss_fn, cfg, spec=self.spec,
             num_devices=dataset.num_devices)
         self.num_devices = dataset.num_devices
+        # federated-environment scenario: realized on device inside the
+        # scan body (availability/latency/dropout uniforms drawn from
+        # the carried PRNG key).  The trivial "ideal" spec keeps the
+        # pre-scenario chunk program untouched — no env draws, no mask
+        # ops, bit-identical numerics.
+        self.scn = scenario_spec(cfg.scenario)
+        self.scn_trivial = is_trivial(self.scn)
+        self._env_channels = env_channels(self.scn)
         self.batches_all, self.valid_all = stack_device_batches(
             dataset, np.arange(self.num_devices))
         eb, ev, ew = stack_eval_batches(dataset)
         self._eval_loss = _make_stacked_eval(loss_fn, eb, ev, ew)
         self.probs = (jnp.asarray(dataset.weights, jnp.float32)
                       if cfg.weighted_sampling else None)
+        # selection sizing, shared by the chunk program and the
+        # telemetry in run() (one definition, no drift)
+        self.k_sel = (cfg.devices_per_round
+                      if cfg.sample_with_replacement
+                      else min(cfg.devices_per_round, self.num_devices))
+        self.k_intended = (self.num_devices
+                           if self.spec.num_selections == 0
+                           else self.k_sel)
         self.comm_per_round = self.spec.comm_per_round
         self._state_fields = runtime_state_fields(self.spec, cfg)
         # jit is lazy: each traces once per distinct chunk length.
@@ -300,10 +388,12 @@ class ScannedDriver:
         (tests / A-B comparisons); ``inject=False`` samples on device
         from the carried PRNG key."""
         cfg, spec = self.cfg, self.spec
-        round_body = self.engine.round_body
+        scn, trivial = self.scn, self.scn_trivial
+        channels = self._env_channels
+        round_body = (self.engine.round_body if trivial
+                      else self.engine.round_body_env)
         n = self.num_devices
-        k_sel = (cfg.devices_per_round if cfg.sample_with_replacement
-                 else min(cfg.devices_per_round, n))
+        k_sel = self.k_sel
         batches_all, valid_all = self.batches_all, self.valid_all
         probs = self.probs
         has_controls = "controls" in self._state_fields
@@ -323,8 +413,16 @@ class ScannedDriver:
             new = dict(carry)
             if inject:
                 s1, s2 = xs["sel"][0], xs["sel"][1]
+                env_keys = ()
+                if channels:
+                    keys = jax.random.split(carry["key"],
+                                            1 + len(channels))
+                    new["key"], env_keys = keys[0], keys[1:]
             else:
-                new["key"], key1, key2 = jax.random.split(carry["key"], 3)
+                nkeys = 3 + len(channels)
+                keys = jax.random.split(carry["key"], nkeys)
+                new["key"], key1, key2 = keys[0], keys[1], keys[2]
+                env_keys = keys[3:]
                 s1, s2 = sample(key1), sample(key2)
             # phase mapping mirrors the host loop: the first selection
             # feeds the gradient gather; the solve selection is the
@@ -352,8 +450,34 @@ class ScannedDriver:
                 aux["controls"] = (carry["controls"] if full else
                                    tmap(lambda x: x[sel_solve],
                                         carry["controls"]))
-            params, aux_new = round_body(
-                carry["params"], aux, phase_a, b, v, decay)
+            if trivial:
+                params, aux_new = round_body(
+                    carry["params"], aux, phase_a, b, v, decay)
+            else:
+                # realize the environment on device: one per-DEVICE
+                # (n,) uniform draw per declared channel (duplicate
+                # selections share one outcome), interpreted by the
+                # same realize_env the host driver uses (same
+                # distribution, this driver's bit stream — see
+                # scenarios/spec.py).  Full-participation specs solve
+                # on EVERY device, so their selection is all n
+                # (sel_solve is an unused k-sized draw there).
+                sel_env = jnp.arange(n) if full else sel_solve
+                uniforms = {c: jax.random.uniform(ek, (n,))
+                            for c, ek in zip(channels, env_keys)}
+                t_f = xs["t"].astype(jnp.float32)
+                env = realize_env(scn, cfg, n, sel_env, t_f, uniforms)
+                # availability gates the gradient-gather phase too —
+                # same per-device uniforms, so one on/offline outcome
+                # per device per round across both phases
+                active_a = None
+                if spec.grad_source == "fresh":
+                    sel_a = sel_env if phase_a is None else s1
+                    active_a = availability_mask(scn, cfg, n, sel_a,
+                                                 t_f, uniforms)
+                params, aux_new, stats = round_body(
+                    carry["params"], aux, phase_a, b, v, decay,
+                    env.active, env.work, active_a)
             for f in aux_fields:
                 new[f] = aux_new[f]
             if has_controls:
@@ -367,7 +491,10 @@ class ScannedDriver:
             loss = jax.lax.cond(
                 xs["do_eval"], self._eval_loss,
                 lambda p: jnp.float32(jnp.nan), params)
-            return new, loss
+            if trivial:
+                return new, loss
+            return new, {"loss": loss,
+                         "effective_k": stats["effective_k"]}
 
         def chunk(carry, xs):
             return jax.lax.scan(body, carry, xs)
@@ -408,7 +535,9 @@ class ScannedDriver:
         t_all = np.arange(num_rounds)
         eval_mask = (t_all % eval_every == 0) | (t_all == num_rounds - 1)
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
-                                        "loss": []}
+                                        "loss": [], "intended_k": [],
+                                        "effective_k": [], "dropped": []}
+        intended = self.k_intended
         chunk_fn = (self._chunk_injected if sel is not None
                     else self._chunk_sampled)
         carry = self._init_carry(params)
@@ -418,10 +547,19 @@ class ScannedDriver:
                   "do_eval": jnp.asarray(eval_mask[off:hi])}
             if sel is not None:
                 xs["sel"] = sel[off:hi]
-            carry, losses = chunk_fn(carry, xs)
+            carry, ys = chunk_fn(carry, xs)
             # chunk boundary: the only host round-trip
-            losses = np.asarray(jax.device_get(losses))
+            if self.scn_trivial:
+                losses = np.asarray(jax.device_get(ys))
+                eff = np.full(hi - off, intended, dtype=np.float64)
+            else:
+                ys = jax.device_get(ys)
+                losses = np.asarray(ys["loss"])
+                eff = np.asarray(ys["effective_k"], dtype=np.float64)
             for i, t in enumerate(range(off, hi)):
+                hist["intended_k"].append(float(intended))
+                hist["effective_k"].append(float(eff[i]))
+                hist["dropped"].append(float(intended - eff[i]))
                 if not eval_mask[t]:
                     continue
                 hist["round"].append(t + 1)

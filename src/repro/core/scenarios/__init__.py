@@ -1,0 +1,26 @@
+"""Declarative federated-environment scenarios: specs + registry.
+
+One :class:`ScenarioSpec` per environment (see ``builtin.py`` for the
+built-ins — ideal, bernoulli, diurnal, stragglers, stragglers_partial,
+dropout, partial_work, hostile); the host loop, batched round engine,
+and scanned driver are generic interpreters of the spec, exactly like
+``core/strategies`` for algorithms.  Register a new spec and every
+execution path — and ``FederatedConfig.scenario`` validation — picks it
+up immediately.
+"""
+from repro.core.scenarios.spec import (DEADLINE_POLICIES, ENV_CHANNELS,
+                                       RoundEnv, ScenarioSpec,
+                                       availability_mask,
+                                       available_scenarios, env_channels,
+                                       is_trivial, realize_env,
+                                       register_scenario, scenario_spec,
+                                       unregister_scenario)
+from repro.core.scenarios import builtin  # noqa: F401  (registers specs)
+
+__all__ = [
+    "ScenarioSpec", "RoundEnv",
+    "register_scenario", "unregister_scenario", "scenario_spec",
+    "available_scenarios", "realize_env", "availability_mask",
+    "env_channels", "is_trivial",
+    "DEADLINE_POLICIES", "ENV_CHANNELS",
+]

@@ -1,0 +1,114 @@
+"""The built-in environment scenarios, one :func:`register_scenario`
+call each — the federated regimes the paper studies (§V: low effective
+participation, systems heterogeneity) plus composites.
+
+All callables follow the one-definition randomness contract of
+``spec.py``: deterministic jnp-compatible maps from uniforms / round
+index to probabilities, latencies, and work fractions.  Knobs live on
+``FederatedConfig`` (``avail_prob``, ``diurnal_period``,
+``straggler_sigma``, ``straggler_deadline``, ``dropout_rate``,
+``partial_min_work``) so one registered scenario covers a whole
+parameter sweep.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.core.scenarios.spec import ScenarioSpec, register_scenario
+
+
+# -- availability processes -------------------------------------------------
+
+def _bernoulli_availability(cfg, num_devices, t):
+    """Every device independently reachable w.p. ``cfg.avail_prob``."""
+    return jnp.full((num_devices,), cfg.avail_prob, jnp.float32)
+
+
+def _diurnal_availability(cfg, num_devices, t):
+    """Periodic (day/night) availability: device k's probability swings
+    around ``cfg.avail_prob`` with period ``cfg.diurnal_period`` rounds
+    and a per-device phase offset 2*pi*k/N (timezones), so at any round
+    part of the fleet is in its low phase."""
+    phase = 2.0 * jnp.pi * jnp.arange(num_devices) / num_devices
+    swing = jnp.sin(2.0 * jnp.pi * t / cfg.diurnal_period + phase)
+    return jnp.clip(cfg.avail_prob + 0.5 * swing, 0.0, 1.0)
+
+
+# -- straggler latency ------------------------------------------------------
+
+def _lognormal_latency(cfg, u):
+    """Lognormal per-round latency (median 1.0 = the nominal round
+    time), sigma ``cfg.straggler_sigma`` — the standard heavy-tailed
+    device-speed model.  Inverse-CDF form: u ~ U(0,1) -> latency."""
+    u = jnp.clip(u, 1e-6, 1.0 - 1e-6)
+    return jnp.exp(cfg.straggler_sigma * ndtri(u))
+
+
+# -- work assignment --------------------------------------------------------
+
+def _linear_work_fraction(cfg, num_devices):
+    """Device-dependent local epoch counts: device k completes a fixed
+    fraction of its E epochs, spread linearly from
+    ``cfg.partial_min_work`` (slowest device) to 1.0 (fastest)."""
+    return jnp.linspace(cfg.partial_min_work, 1.0, num_devices)
+
+
+# -- the registry -----------------------------------------------------------
+
+IDEAL = register_scenario(ScenarioSpec(
+    name="ideal",
+    summary="identity environment: every selected device is available, "
+            "on time, and completes full local work (the paper's "
+            "baseline assumption; structurally a no-op)"))
+
+BERNOULLI = register_scenario(ScenarioSpec(
+    name="bernoulli",
+    summary="each selected device independently available w.p. "
+            "avail_prob (low effective participation, the paper's "
+            "degradation axis)",
+    availability=_bernoulli_availability))
+
+DIURNAL = register_scenario(ScenarioSpec(
+    name="diurnal",
+    summary="periodic day/night availability with per-device phase "
+            "(timezones): correlated, time-varying participation",
+    availability=_diurnal_availability))
+
+STRAGGLERS = register_scenario(ScenarioSpec(
+    name="stragglers",
+    summary="lognormal device latency; the server drops devices that "
+            "miss straggler_deadline (synchronous FL with a timeout)",
+    latency_quantile=_lognormal_latency,
+    deadline_policy="drop"))
+
+STRAGGLERS_PARTIAL = register_scenario(ScenarioSpec(
+    name="stragglers_partial",
+    summary="lognormal device latency; late devices submit the iterate "
+            "they reached at the deadline (FedProx-style partial work)",
+    latency_quantile=_lognormal_latency,
+    deadline_policy="partial"))
+
+DROPOUT = register_scenario(ScenarioSpec(
+    name="dropout",
+    summary="each participating device drops mid-round w.p. "
+            "dropout_rate; its update is lost",
+    dropout=True))
+
+PARTIAL_WORK = register_scenario(ScenarioSpec(
+    name="partial_work",
+    summary="deterministic device-dependent local epoch counts: work "
+            "fractions linear from partial_min_work to 1 across the "
+            "fleet (systems heterogeneity without randomness)",
+    work_fraction=_linear_work_fraction))
+
+HOSTILE = register_scenario(ScenarioSpec(
+    name="hostile",
+    summary="everything at once: Bernoulli availability, partial-credit "
+            "stragglers, mid-round dropout, and device-dependent work "
+            "(the stress composite the property tests hammer)",
+    availability=_bernoulli_availability,
+    latency_quantile=_lognormal_latency,
+    deadline_policy="partial",
+    dropout=True,
+    work_fraction=_linear_work_fraction))

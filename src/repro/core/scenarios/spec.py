@@ -1,0 +1,252 @@
+"""Declarative federated-environment scenarios + registry.
+
+The paper's headline empirical axis is the *environment*, not the
+algorithm: FedDANE degrades under low device participation and
+heterogeneity (§V).  A :class:`ScenarioSpec` models that environment
+declaratively — per-device availability processes, straggler latency
+with a server deadline, dropout-mid-round, and partial-work clients —
+and the three execution paths (``FederatedTrainer`` host loop,
+``RoundEngine`` batched round, ``ScannedDriver`` scan body) are generic
+interpreters of it, exactly mirroring the ``AlgorithmSpec`` registry
+pattern of ``core/strategies``.
+
+Round semantics
+---------------
+Availability is a property of the *device*: an offline device can serve
+neither FedDANE's phase-A gradient gather nor the solve phase, so the
+availability process gates BOTH selections (this is what makes the
+paper's low-effective-participation axis bite — the aggregated gradient
+g_t is estimated from the thin available subset, and with no available
+gradient device there is no correction to broadcast at all).
+Stragglers, dropout, and partial work act on the *solve* selection only:
+they model slowness/failure of the expensive local-training phase, while
+the one-gradient exchange is within any reasonable deadline.  Given the
+K selected solve devices the scenario produces two per-device
+quantities:
+
+- ``active``: float 0/1 — the device's update reaches the server this
+  round.  A device is inactive when its availability draw fails, when
+  it exceeds the straggler deadline under the ``"drop"`` policy, or
+  when it drops out mid-round.  Inactive devices contribute nothing:
+  no aggregation weight, no control/g_prev refresh.  If *no* selected
+  device is active the round is a no-op (``w^t = w^{t-1}``; a server
+  optimizer still sees a zero pseudo-gradient).
+- ``work``: float in (0, 1] — the fraction of the device's local steps
+  actually completed, from partial-work assignment and/or the
+  ``"partial"`` straggler policy (a late device submits the iterate it
+  reached at the deadline).  Each device runs
+  ``min(total, ceil(work * total))`` of its ``E * num_batches`` steps.
+
+One-definition randomness contract
+----------------------------------
+Spec callables never draw randomness themselves: they map *uniform
+draws* (and the round index) to probabilities / latencies through
+jnp-compatible ops.  Each driver supplies the uniforms from its own RNG
+— host numpy for the python driver, ``jax.random`` threaded through the
+scan carry for the scanned driver — so, exactly like device sampling
+(see server.py), the two drivers realize the same *distribution* from
+different bit streams: per-driver seed reproducibility is the contract,
+cross-driver draw identity is not.  Deterministic scenario components
+(periodic availability, per-device work assignment) ARE identical
+across drivers and are what the cross-path scenario parity tests pin.
+
+The ``"ideal"`` scenario (every field None/off) is *structurally*
+trivial: :func:`is_trivial` lets every path keep its exact pre-scenario
+code — no masks, no extra rng draws — so ideal runs are bit-identical
+to a build without the scenario layer (pinned by tests/test_scenarios.py
+against tests/golden/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+#: Straggler deadline policies: ``"drop"`` discards late devices from
+#: the round; ``"partial"`` accepts the iterate a late device reached at
+#: the deadline (work fraction deadline/latency).
+DEADLINE_POLICIES = ("drop", "partial")
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One federated environment, declaratively.
+
+    Availability
+      - ``availability(cfg, num_devices, t) -> (N,)`` per-device
+        probability of being reachable at round ``t`` (``t`` may be a
+        traced scalar under the scanned driver — use jnp ops).  ``None``
+        = always available.
+
+    Stragglers
+      - ``latency_quantile(cfg, u) -> latencies``: inverse-CDF of the
+        per-device round latency, applied to uniform draws ``u`` in
+        (0, 1) — shape-polymorphic jnp ops, so one definition serves
+        host numpy draws and on-device draws.  ``None`` = no stragglers.
+      - ``deadline_policy``: what the server does with devices whose
+        latency exceeds ``cfg.straggler_deadline`` (see
+        :data:`DEADLINE_POLICIES`).
+
+    Dropout
+      - ``dropout``: each active device independently drops mid-round
+        with probability ``cfg.dropout_rate``; its update is lost.
+
+    Partial work
+      - ``work_fraction(cfg, num_devices) -> (N,)``: deterministic
+        per-device fraction of local work performed every round
+        (device-dependent local epoch counts — slow phones do fewer
+        steps).  ``None`` = full work.
+    """
+    name: str
+    summary: str
+    availability: Optional[Callable[[Any, int, Any], Any]] = None
+    latency_quantile: Optional[Callable[[Any, Any], Any]] = None
+    deadline_policy: str = "drop"
+    dropout: bool = False
+    work_fraction: Optional[Callable[[Any, int], Any]] = None
+
+
+class RoundEnv(NamedTuple):
+    """One round's realized environment for the K selected devices."""
+    active: Any   # float (K,) 0/1 — update reaches the server
+    work: Any     # float (K,) in (0, 1] — fraction of local steps done
+
+
+#: Uniform-draw channels a round may consume, in a fixed order so both
+#: drivers burn their RNG identically regardless of which components a
+#: spec declares (simplifies seed-reproducibility reasoning).  Each
+#: channel is one (num_devices,) draw per round — indexed by device id
+#: in :func:`realize_env`, so duplicate selections share one outcome.
+ENV_CHANNELS = ("avail", "latency", "dropout")
+
+
+def is_trivial(spec: ScenarioSpec) -> bool:
+    """True when the scenario is the identity environment: every path
+    may (and does) take its exact pre-scenario code."""
+    return (spec.availability is None and spec.latency_quantile is None
+            and not spec.dropout and spec.work_fraction is None)
+
+
+def env_channels(spec: ScenarioSpec) -> Tuple[str, ...]:
+    """The uniform channels this spec actually consumes (each needs one
+    (K,) draw per round from the driving RNG)."""
+    out = []
+    if spec.availability is not None:
+        out.append("avail")
+    if spec.latency_quantile is not None:
+        out.append("latency")
+    if spec.dropout:
+        out.append("dropout")
+    return tuple(out)
+
+
+def realize_env(spec: ScenarioSpec, cfg, num_devices: int, sel, t,
+                uniforms: Dict[str, Any]) -> RoundEnv:
+    """The scenario interpreter: uniforms -> (active, work) for ``sel``.
+
+    Written once in jnp-compatible ops; ``sel`` is the (K,) solve
+    selection, ``t`` the round index (python int or traced scalar), and
+    ``uniforms`` maps each channel of :func:`env_channels` to an (N,)
+    uniform draw — PER DEVICE, not per selection slot, so a device
+    selected twice under ``sample_with_replacement`` realizes ONE
+    availability / latency / dropout outcome per round (the environment
+    is a property of the device, not of the selection).  Both drivers
+    call exactly this function, so the environment *distribution* is
+    identical by construction.
+    """
+    k = sel.shape[0]
+    active = jnp.ones((k,), jnp.float32)
+    work = jnp.ones((k,), jnp.float32)
+    if spec.availability is not None:
+        p = jnp.asarray(spec.availability(cfg, num_devices, t),
+                        jnp.float32)
+        active = active * (uniforms["avail"][sel] < p[sel])
+    if spec.latency_quantile is not None:
+        lat = jnp.asarray(
+            spec.latency_quantile(cfg, uniforms["latency"][sel]),
+            jnp.float32)
+        if spec.deadline_policy == "drop":
+            active = active * (lat <= cfg.straggler_deadline)
+        else:
+            work = work * jnp.clip(cfg.straggler_deadline
+                                   / jnp.maximum(lat, 1e-9), 0.0, 1.0)
+    if spec.dropout:
+        active = active * (uniforms["dropout"][sel] >= cfg.dropout_rate)
+    if spec.work_fraction is not None:
+        f = jnp.asarray(spec.work_fraction(cfg, num_devices), jnp.float32)
+        work = work * f[sel]
+    return RoundEnv(active=active.astype(jnp.float32),
+                    work=jnp.clip(work, 1e-6, 1.0))
+
+
+def availability_mask(spec: ScenarioSpec, cfg, num_devices: int, sel, t,
+                      uniforms: Dict[str, Any]):
+    """The availability-only 0/1 mask for ``sel`` — what gates a
+    gradient-gather (phase A) selection.  Uses the SAME per-device
+    ``"avail"`` uniforms as :func:`realize_env`, so one device is
+    consistently on- or offline for the whole round across both phases.
+    All-ones when the spec declares no availability process.
+    """
+    k = sel.shape[0]
+    if spec.availability is None:
+        return jnp.ones((k,), jnp.float32)
+    p = jnp.asarray(spec.availability(cfg, num_devices, t), jnp.float32)
+    return (uniforms["avail"][sel] < p[sel]).astype(jnp.float32)
+
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def _check_scenario(spec: ScenarioSpec) -> None:
+    """Completeness check at registration, mirroring strategies._check_spec."""
+    def bad(msg):
+        raise ValueError(f"ScenarioSpec {spec.name!r}: {msg}")
+
+    if not spec.name or not spec.name.isidentifier():
+        bad(f"name must be a non-empty identifier, got {spec.name!r}")
+    if spec.deadline_policy not in DEADLINE_POLICIES:
+        bad(f"deadline_policy must be one of {DEADLINE_POLICIES}, "
+            f"got {spec.deadline_policy!r}")
+    if spec.latency_quantile is None and \
+            spec.deadline_policy != DEADLINE_POLICIES[0]:
+        bad("deadline_policy is meaningless without latency_quantile; "
+            "leave it at the default")
+
+
+def register_scenario(spec: ScenarioSpec, *,
+                      override: bool = False) -> ScenarioSpec:
+    """Register ``spec`` under ``spec.name``; returns the spec.
+
+    Rejects duplicate names unless ``override=True``; completeness is
+    checked here so a broken registration fails at import time.
+    """
+    _check_scenario(spec)
+    if spec.name in _REGISTRY and not override:
+        raise ValueError(
+            f"scenario {spec.name!r} is already registered; pass "
+            f"override=True to replace it")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_scenario(name: str) -> None:
+    """Remove ``name`` from the registry (test cleanup)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    """Sorted names of every registered scenario — the single source of
+    truth for what ``FederatedConfig.scenario`` accepts."""
+    return tuple(sorted(_REGISTRY))
+
+
+def scenario_spec(name: str) -> ScenarioSpec:
+    """Look up a registered scenario; unknown names raise with the full
+    sorted list (the only scenario validation in the system)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; registered: "
+            f"{', '.join(available_scenarios())}") from None

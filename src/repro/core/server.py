@@ -19,6 +19,16 @@ the contract and is not tested.  What IS guaranteed — and pinned by
 tests/test_scan_driver.py — is that each driver is individually
 reproducible: a fixed seed yields an identical selection sequence, and
 therefore an identical loss history, run after run.
+
+The same-distribution half of the contract has statistical teeth in
+tests/test_sampling_stats.py: fixed-seed chi-square/frequency checks
+that the two samplers' per-device inclusion marginals match (weighted,
+with/without replacement), and that the scenario layer's Bernoulli
+availability thins both marginals identically.  The environment
+scenarios (core/scenarios) extend this contract: per-round availability
+/ latency / dropout uniforms are drawn from each driver's own stream
+(host numpy vs. the scan carry's PRNG key), so realized environments
+follow the same distribution per driver without cross-driver identity.
 """
 from __future__ import annotations
 
@@ -93,6 +103,28 @@ def aggregate_stacked(tree) -> object:
     import jax
 
     return jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)
+
+
+def aggregate_stacked_masked(tree, active, fallback) -> object:
+    """Scenario-aware ``aggregate_stacked``: mean over the devices with
+    ``active[k] == 1`` only (stacked leading axis K, ``active`` a float
+    0/1 ``(K,)`` vector).  Inactive rows contribute exact zeros, so the
+    result equals the host loop's plain mean over the active subset.
+    When NO device is active the round has nothing to aggregate and
+    ``fallback`` (an unstacked pytree — ``w0`` for params, the carried
+    value for state) is returned instead.  Traceable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    asum = active.sum()
+    denom = jnp.maximum(asum, 1.0)
+
+    def mmean(x, fb):
+        a = active.reshape(active.shape + (1,) * (x.ndim - 1))
+        return jnp.where(asum > 0, (x * a).sum(axis=0) / denom, fb)
+
+    return jax.tree_util.tree_map(mmean, tree, fallback)
 
 
 def server_step(w0, w_agg, opt=None, opt_state=None):

@@ -1,0 +1,120 @@
+"""Deterministic stand-in for the parts of ``hypothesis`` this suite uses.
+
+The property suites (test_properties.py, test_moe.py) used to
+``pytest.importorskip("hypothesis")`` and silently skip wherever the
+library wasn't installed — which on dependency-frozen containers meant
+the invariants they pin were never checked at all.  This module is the
+gate instead of the skip: when the real hypothesis is importable it is
+used (CI installs it from requirements-dev.txt and gets shrinking,
+example databases, the works); when it is not, this fallback runs the
+same test bodies over seeded random examples, so the invariants are
+exercised everywhere and the suites report 0 skips from missing deps.
+
+Supported surface (exactly what the suites consume):
+``given``, ``settings(max_examples=, deadline=)``, and
+``strategies.{floats, integers, lists, composite}``.  Examples are
+drawn from ``numpy.random.default_rng`` seeded per test name, so a
+failure reproduces run after run.  No shrinking — a failing example is
+reported as-is; if you want minimal counterexamples, install the real
+hypothesis.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def floats(min_value, max_value, allow_nan=False, width=64,
+           **_ignored) -> _Strategy:
+    def sample(rng):
+        x = float(rng.uniform(min_value, max_value))
+        return float(np.float32(x)) if width == 32 else x
+    return _Strategy(sample)
+
+
+def integers(min_value, max_value) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                  max_value + 1)))
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10) -> _Strategy:
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def composite(fn):
+    """``@composite def strat(draw, *args)`` -> callable returning a
+    strategy, mirroring hypothesis.strategies.composite."""
+    @functools.wraps(fn)
+    def build(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strategy: strategy.example(rng),
+                      *args, **kwargs)
+        return _Strategy(sample)
+    return build
+
+
+def given(*strategies):
+    def decorate(test):
+        # NOTE deliberately no functools.wraps: the runner must expose a
+        # ZERO-arg signature (like hypothesis' wrapper does) so pytest
+        # doesn't mistake the strategy parameters for fixtures.
+        def runner():
+            n = getattr(runner, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            # per-test deterministic stream: same examples every run
+            rng = np.random.default_rng(
+                zlib.crc32(test.__qualname__.encode()))
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strategies)
+                test(*drawn)
+        runner.__name__ = test.__name__
+        runner.__qualname__ = test.__qualname__
+        runner.__doc__ = test.__doc__
+        runner.__module__ = test.__module__
+        runner._max_examples = DEFAULT_MAX_EXAMPLES
+        return runner
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(test):
+        test._max_examples = max_examples
+        return test
+    return decorate
+
+
+class _StrategiesModule:
+    """Namespace mimicking ``hypothesis.strategies`` (imported as st)."""
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+strategies = _StrategiesModule()

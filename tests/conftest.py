@@ -6,6 +6,18 @@ import pytest
 # launch/dryrun.py forces 512 placeholder devices (in its own process).
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json fixtures instead of "
+             "comparing against them (commit the result)")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

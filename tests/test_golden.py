@@ -1,0 +1,93 @@
+"""Golden numerics regression: pinned seed-deterministic loss histories.
+
+The cross-path parity suites (test_engine / test_scan_driver /
+test_strategy) compare live paths against each other at atol 1e-5 — they
+catch the paths *diverging*, but not all of them drifting *together*
+(a changed default, a reordered reduction, a solver tweak).  This suite
+pins the absolute numbers: a 3-round loss history per registered
+algorithm on the reference path (loop engine, python driver, CPU),
+checked into ``tests/golden/*.json`` at generation time.
+
+On mismatch the fix is one of:
+
+- you changed numerics intentionally -> regenerate with
+  ``PYTHONPATH=src python -m pytest tests/test_golden.py --update-golden``
+  and commit the new fixtures with a note in the PR body;
+- you changed numerics unintentionally -> that is the bug this suite
+  exists to catch.
+
+The fixtures double as the null-scenario pin: they were generated with
+the scenario layer absent/off, so ``scenario="ideal"`` (the default)
+must keep reproducing them (see tests/test_scenarios.py).
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.core.strategies import available_algorithms
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+ROUNDS = 3
+
+# Reference-path configuration the fixtures were generated under.  Any
+# change here invalidates every fixture — regenerate, don't hand-edit.
+BASE_KW = dict(num_devices=6, devices_per_round=3, local_epochs=1,
+               local_batch_size=10, learning_rate=0.05, mu=0.01, seed=5,
+               correction_decay=0.9, engine="loop", round_driver="python")
+DATASET_KW = dict(alpha=0.5, beta=0.5, num_devices=6, seed=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(**DATASET_KW)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return ds, params
+
+
+def golden_run(ds, params, algo):
+    cfg = FederatedConfig(algorithm=algo, **BASE_KW)
+    tr = FederatedTrainer(logreg_loss, ds, cfg)
+    hist, _ = tr.run(params, ROUNDS, eval_every=1)
+    return hist
+
+
+@pytest.mark.parametrize("algo", available_algorithms())
+def test_loss_history_matches_golden(setup, algo, update_golden):
+    ds, params = setup
+    hist = golden_run(ds, params, algo)
+    path = GOLDEN_DIR / f"{algo}.json"
+    record = {"algorithm": algo, "rounds": ROUNDS,
+              "config": {k: v for k, v in BASE_KW.items()},
+              "round": hist["round"], "comm_rounds": hist["comm_rounds"],
+              "loss": hist["loss"]}
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(record, indent=2) + "\n")
+        return
+    if not path.exists():
+        pytest.fail(
+            f"no golden fixture for {algo!r} ({path}); generate it with "
+            f"`PYTHONPATH=src python -m pytest tests/test_golden.py "
+            f"--update-golden` and commit the result")
+    ref = json.loads(path.read_text())
+    assert ref["config"] == record["config"], (
+        f"golden fixture for {algo!r} was generated under a different "
+        f"reference config; regenerate with --update-golden")
+    assert ref["round"] == hist["round"]
+    assert ref["comm_rounds"] == hist["comm_rounds"]
+    np.testing.assert_allclose(
+        hist["loss"], ref["loss"], rtol=1e-6, atol=1e-8,
+        err_msg=(
+            f"{algo!r} loss history drifted from the pinned golden "
+            f"({path}).  If this change is intentional, regenerate via "
+            f"`PYTHONPATH=src python -m pytest tests/test_golden.py "
+            f"--update-golden` and say so in the PR; if not, you just "
+            f"caught a silent numerics regression."))

@@ -4,8 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # same API, seeded examples, no shrinking
+    from _hypo_fallback import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.models.moe import group_capacity, moe_ffn, moe_specs

@@ -1,0 +1,318 @@
+"""The federated-environment scenario layer (core/scenarios).
+
+Pinned contracts:
+
+1. Registry mechanics mirror the algorithm registry: round-trip,
+   duplicate rejection, completeness checks, config validation with the
+   full sorted list in the error.
+2. NULL-SCENARIO PIN: ``scenario="ideal"`` (the default) reproduces the
+   pre-scenario loss histories checked into ``tests/golden/paths.json``
+   for EVERY registered algorithm across loop/batched x python/scan —
+   the scenario layer must be a true no-op when off.  The fixture was
+   generated from main BEFORE the scenario layer existed; regenerate
+   only for intentional numerics changes
+   (``pytest tests/test_scenarios.py --update-golden``).
+3. The mask machinery itself is exact: a *non-trivial* scenario whose
+   draws happen to keep every device active at full work (bernoulli at
+   avail_prob=1.0) matches the ideal path under injected selections.
+4. Deterministic scenarios (partial_work) agree across all three
+   execution paths — same environment, three interpreters.
+5. Per-round participation telemetry (intended/effective/dropped) is in
+   every run history, and a round with zero active devices is a no-op.
+6. The paper's qualitative §V finding, directionally: at low effective
+   participation FedDANE degrades MORE than FedAvg/FedProx.
+"""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+from conftest import leaves_allclose as _leaves_allclose
+
+from benchmarks.common import run_algo
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer
+from repro.core.scenarios import (ScenarioSpec, available_scenarios,
+                                  register_scenario, scenario_spec,
+                                  unregister_scenario)
+from repro.core.strategies import available_algorithms
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+GOLDEN_PATHS = pathlib.Path(__file__).parent / "golden" / "paths.json"
+PATHS = [("loop", "python"), ("batched", "python"), ("batched", "scan")]
+BASE_KW = dict(num_devices=6, devices_per_round=3, local_epochs=1,
+               local_batch_size=10, learning_rate=0.05, mu=0.01, seed=5,
+               correction_decay=0.9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=6, seed=4)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _run(ds, params, algo, engine, driver, num_rounds=3, sel=None, **over):
+    kw = dict(BASE_KW, algorithm=algo, engine=engine, round_driver=driver,
+              chunk_rounds=num_rounds)
+    kw.update(over)
+    tr = FederatedTrainer(logreg_loss, ds, FederatedConfig(**kw))
+    return tr.run(params, num_rounds, eval_every=1, selections=sel)
+
+
+def _sel(rounds, seed=11):
+    rng = np.random.default_rng(seed)
+    return np.stack([
+        np.stack([rng.choice(6, 3, replace=False) for _ in range(2)])
+        for _ in range(rounds)])
+
+
+# -- registry mechanics -----------------------------------------------------
+
+def test_registration_roundtrip():
+    spec = ScenarioSpec(name="unit_env", summary="test-only")
+    try:
+        assert register_scenario(spec) is spec
+        assert scenario_spec("unit_env") is spec
+        assert "unit_env" in available_scenarios()
+    finally:
+        unregister_scenario("unit_env")
+    assert "unit_env" not in available_scenarios()
+
+
+def test_duplicate_name_rejected():
+    spec = ScenarioSpec(name="unit_dup_env", summary="v1")
+    try:
+        register_scenario(spec)
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(dataclasses.replace(spec, summary="v2"))
+        v2 = register_scenario(dataclasses.replace(spec, summary="v2"),
+                               override=True)
+        assert scenario_spec("unit_dup_env") is v2
+    finally:
+        unregister_scenario("unit_dup_env")
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(name="has space"), "identifier"),
+    (dict(deadline_policy="retry"), "deadline_policy"),
+    (dict(deadline_policy="partial"), "meaningless"),
+])
+def test_incomplete_scenarios_rejected_at_registration(bad, match):
+    spec = dataclasses.replace(
+        ScenarioSpec(name="unit_bad_env", summary="incomplete"), **bad)
+    with pytest.raises(ValueError, match=match):
+        register_scenario(spec)
+    assert "unit_bad_env" not in available_scenarios()
+
+
+def test_unknown_scenario_raises_with_sorted_list():
+    with pytest.raises(ValueError) as e:
+        FederatedConfig(scenario="chaos_monkey")
+    msg = str(e.value)
+    assert "chaos_monkey" in msg
+    for name in available_scenarios():
+        assert name in msg
+
+
+@pytest.mark.parametrize("bad_kw", [
+    dict(avail_prob=1.5), dict(dropout_rate=1.0),
+    dict(straggler_deadline=0.0), dict(partial_min_work=0.0),
+    dict(diurnal_period=0),
+])
+def test_bad_scenario_knobs_rejected(bad_kw):
+    with pytest.raises(ValueError):
+        FederatedConfig(**bad_kw)
+
+
+# -- the null-scenario pin --------------------------------------------------
+
+@pytest.mark.parametrize("algo", available_algorithms())
+def test_ideal_scenario_reproduces_pre_scenario_numerics(
+        setup, algo, update_golden):
+    """scenario="ideal" must be a true no-op: every algorithm, every
+    path, pinned against histories generated on main BEFORE the
+    scenario layer existed (tests/golden/paths.json)."""
+    ds, params = setup
+    got = {}
+    for engine, driver in PATHS:
+        hist, _ = _run(ds, params, algo, engine, driver,
+                       scenario="ideal")
+        got[f"{engine}_{driver}"] = hist["loss"]
+        # ideal telemetry: constants K / K / 0, one entry per round
+        assert hist["intended_k"] == [3.0] * 3 or \
+            hist["intended_k"] == [6.0] * 3          # full participation
+        assert hist["effective_k"] == hist["intended_k"]
+        assert hist["dropped"] == [0.0] * 3
+    if update_golden:
+        ref = (json.loads(GOLDEN_PATHS.read_text())
+               if GOLDEN_PATHS.exists()
+               else {"rounds": 3, "config": dict(BASE_KW), "loss": {}})
+        ref["loss"][algo] = got
+        GOLDEN_PATHS.write_text(json.dumps(ref, indent=2) + "\n")
+        return
+    if not GOLDEN_PATHS.exists():
+        pytest.fail(
+            f"no null-scenario fixture at {GOLDEN_PATHS}; generate it "
+            f"with `PYTHONPATH=src python -m pytest "
+            f"tests/test_scenarios.py --update-golden` and commit it")
+    ref = json.loads(GOLDEN_PATHS.read_text())["loss"][algo]
+    for path_name, losses in got.items():
+        np.testing.assert_allclose(
+            losses, ref[path_name], rtol=1e-6, atol=1e-8,
+            err_msg=(
+                f"{algo!r} under scenario='ideal' ({path_name}) no "
+                f"longer reproduces the pre-scenario numerics pinned in "
+                f"{GOLDEN_PATHS} — the scenario layer leaked into the "
+                f"null path.  Only regenerate (--update-golden) for an "
+                f"INTENTIONAL numerics change."))
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "feddane", "scaffold",
+                                  "feddane_pipelined", "sdane"])
+def test_all_active_masked_path_equals_ideal(setup, algo):
+    """The mask machinery is exact: bernoulli at avail_prob=1.0 runs the
+    scenario (masked) code path but keeps every device active at full
+    work — with injected selections it must match ideal on every
+    execution path."""
+    ds, params = setup
+    sel = _sel(3)
+    for engine, driver in PATHS:
+        h_ideal, p_ideal = _run(ds, params, algo, engine, driver,
+                                sel=sel)
+        h_full, p_full = _run(ds, params, algo, engine, driver, sel=sel,
+                              scenario="bernoulli", avail_prob=1.0)
+        np.testing.assert_allclose(h_ideal["loss"], h_full["loss"],
+                                   atol=1e-6)
+        _leaves_allclose(p_ideal, p_full, atol=1e-6)
+
+
+# -- cross-path agreement on non-trivial scenarios --------------------------
+
+@pytest.mark.parametrize("algo", ["fedavg", "feddane", "scaffold",
+                                  "feddane_pipelined", "sdane"])
+def test_deterministic_scenario_parity_across_paths(setup, algo):
+    """partial_work is deterministic (no env randomness), so all three
+    interpreters must realize the same environment and agree."""
+    ds, params = setup
+    sel = _sel(3, seed=23)
+    runs = [_run(ds, params, algo, engine, driver, sel=sel,
+                 scenario="partial_work", partial_min_work=0.3)
+            for engine, driver in PATHS]
+    h0, p0 = runs[0]
+    assert np.isfinite(h0["loss"]).all()
+    for h, p in runs[1:]:
+        np.testing.assert_allclose(h0["loss"], h["loss"], atol=1e-5)
+        _leaves_allclose(p0, p, atol=1e-5)
+
+
+def test_partial_work_actually_truncates(setup):
+    """Sanity: work fractions change the trajectory (the cutoff solver
+    is really running) and telemetry still reports full participation."""
+    ds, params = setup
+    sel = _sel(3, seed=7)
+    h_ideal, _ = _run(ds, params, "fedavg", "loop", "python", sel=sel)
+    h_part, _ = _run(ds, params, "fedavg", "loop", "python", sel=sel,
+                     scenario="partial_work", partial_min_work=0.25)
+    assert h_part["effective_k"] == [3.0] * 3
+    diff = max(abs(a - b)
+               for a, b in zip(h_ideal["loss"], h_part["loss"]))
+    assert diff > 1e-7
+
+
+# -- every scenario x every path runs ---------------------------------------
+
+@pytest.mark.parametrize("scenario", available_scenarios())
+@pytest.mark.parametrize("engine, driver", PATHS)
+def test_every_scenario_runs_every_path(setup, scenario, engine, driver):
+    ds, params = setup
+    hist, p = _run(ds, params, "feddane", engine, driver, num_rounds=2,
+                   scenario=scenario, avail_prob=0.6, dropout_rate=0.3,
+                   straggler_deadline=1.2, partial_min_work=0.4)
+    assert len(hist["loss"]) == 2
+    assert np.isfinite(hist["loss"]).all()
+    for leaf in jax.tree_util.tree_leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert len(hist["effective_k"]) == 2
+    for eff, intended in zip(hist["effective_k"], hist["intended_k"]):
+        assert 0.0 <= eff <= intended
+
+
+@pytest.mark.parametrize("engine, driver", PATHS)
+def test_full_participation_spec_under_scenario(setup, engine, driver):
+    """Full-participation specs (num_selections=0) solve on EVERY
+    device, so the realized environment must cover all N of them —
+    regression for the scan body sizing the env to K instead of N."""
+    ds, params = setup
+    hist, p = _run(ds, params, "inexact_dane", engine, driver,
+                   num_rounds=2, scenario="bernoulli", avail_prob=0.6)
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["intended_k"] == [6.0, 6.0]        # N, not K
+    for eff, intended in zip(hist["effective_k"], hist["intended_k"]):
+        assert 0.0 <= eff <= intended
+
+
+def test_register_your_own_scenario_end_to_end(setup):
+    """Extensibility proof: a custom deterministic availability process
+    registered here runs under all three paths with no core change, and
+    its realized effective K is exactly predictable."""
+    import jax.numpy as jnp
+    ds, params = setup
+    spec = ScenarioSpec(
+        name="unit_even_only",
+        summary="only even-indexed devices are ever reachable",
+        availability=lambda cfg, n, t: (jnp.arange(n) % 2 == 0
+                                        ).astype(jnp.float32))
+    register_scenario(spec)
+    try:
+        sel = _sel(2, seed=3)
+        for engine, driver in PATHS:
+            hist, _ = _run(ds, params, "fedavg", engine, driver,
+                           num_rounds=2, sel=sel,
+                           scenario="unit_even_only")
+            expect = [float((sel[t, 0] % 2 == 0).sum())
+                      for t in range(2)]
+            assert hist["effective_k"] == expect
+    finally:
+        unregister_scenario("unit_even_only")
+
+
+def test_zero_active_round_is_noop(setup):
+    """A round where no selected device is active leaves the params
+    untouched (and the run's loss curve flat) on every path."""
+    ds, params = setup
+    for engine, driver in PATHS:
+        hist, p = _run(ds, params, "fedavg", engine, driver,
+                       num_rounds=2, scenario="bernoulli",
+                       avail_prob=1e-9)
+        assert hist["effective_k"] == [0.0, 0.0]
+        _leaves_allclose(p, params, atol=0)
+        assert hist["loss"][0] == hist["loss"][1]
+
+
+# -- the paper's finding, directionally -------------------------------------
+
+def test_feddane_degrades_more_at_low_effective_participation():
+    """Paper §V, scenario-grid form (benchmarks/fig2_participation.py
+    smoke-sized): shrinking EFFECTIVE participation via Bernoulli
+    availability hurts FedDANE more than FedAvg and FedProx — its
+    correction is estimated from the same thin selection."""
+    ds = make_synthetic(0.5, 0.5, seed=0)
+    specs = logreg_specs(60, 10)
+    deg = {}
+    for algo in ("fedavg", "fedprox", "feddane"):
+        mu = 0.001 if algo != "fedavg" else 0.0
+        kw = dict(mu=mu, num_rounds=8, lr=0.01, local_epochs=2,
+                  devices_per_round=10)
+        ideal = run_algo(algo, logreg_loss, ds, specs, **kw)
+        low = run_algo(algo, logreg_loss, ds, specs,
+                       scenario="bernoulli", avail_prob=0.2, **kw)
+        assert low["effective_k_mean"] < 0.5 * ideal["effective_k_mean"]
+        deg[algo] = low["final"] - ideal["final"]
+    assert deg["feddane"] > 0.0                   # low K hurts FedDANE
+    assert deg["feddane"] > deg["fedavg"]         # ...more than FedAvg
+    assert deg["feddane"] > deg["fedprox"]        # ...and FedProx
