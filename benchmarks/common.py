@@ -1,9 +1,28 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers + the machine-readable bench-output schema.
+
+Schema
+------
+Multi-config benchmark modules emit ONE JSON file of *named entries* so
+the bench trajectory stays machine-comparable across PRs (the CSV rows
+printed by :func:`emit` remain the human-readable view).  The file
+shape is::
+
+    {"schema": 1, "backend": "...", "device_count": N,
+     "entries": [{"name": ..., "mode": ..., "driver": ...,
+                  "mesh_devices": ..., "k": ..., "ms_per_round": ...,
+                  ...free-form extras...}, ...]}
+
+``name`` is unique within a file; ``mode`` groups comparable entries
+(e.g. ``"engine_round"`` / ``"driver_run"`` / ``"sharded"`` in
+BENCH_round.json).  Build entries with :func:`bench_entry` (which
+stamps the backend) and write with :func:`write_bench_json`.
+"""
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 
@@ -13,6 +32,42 @@ from repro.models.param import init_params
 
 # Scale factor for benchmark sizes (rounds); BENCH_SCALE=0.2 for quick runs.
 SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+
+#: Version of the bench-JSON layout written by :func:`write_bench_json`.
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_entry(name: str, *, mode: str, driver: str, k: int,
+                ms_per_round: float, mesh_devices: int = 1,
+                **extra) -> Dict:
+    """One named bench measurement in the cross-PR schema.
+
+    ``mode``: comparison group (``"engine_round"`` = single-round engine
+    A/B, ``"driver_run"`` = multi-round driver A/B, ``"sharded"`` =
+    mesh-sharded vs single-device); ``driver``: the engine/driver under
+    test; ``mesh_devices``: client-mesh size (1 = no mesh); ``extra``
+    keys (algo, speedup, ...) pass through verbatim.
+    """
+    return {"name": name, "mode": mode, "driver": driver,
+            "mesh_devices": mesh_devices, "k": k,
+            "ms_per_round": round(ms_per_round, 4),
+            "backend": jax.default_backend(), **extra}
+
+
+def write_bench_json(path: str, entries: List[Dict]) -> None:
+    """Write ``entries`` under the versioned bench schema; duplicate
+    entry names are a bug in the producing module and raise here."""
+    names = [e["name"] for e in entries]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(f"duplicate bench entry names: {sorted(dupes)}")
+    doc = {"schema": BENCH_SCHEMA_VERSION,
+           "backend": jax.default_backend(),
+           "device_count": jax.device_count(),
+           "entries": entries}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"bench_json,{len(entries)},entries -> {path}")
 
 
 def rounds(n: int) -> int:
@@ -25,9 +80,10 @@ def run_algo(algo: str, loss_fn, dataset, specs, *, mu: float = 0.0,
              eval_every: int = 1000, correction_decay: float = 1.0,
              num_devices=None, **cfg_extra) -> Dict:
     """Run one (algorithm, dataset) cell; extra keyword args go straight
-    into ``FederatedConfig`` (scenario knobs, drivers, server opts...).
-    The result carries the per-round participation telemetry the
-    scenario layer realized (mean effective K, total dropped)."""
+    into ``FederatedConfig`` (scenario knobs, drivers, server opts,
+    ``mesh_devices``...).  The result carries the per-round
+    participation telemetry the scenario layer realized (mean effective
+    K, total dropped)."""
     cfg = FederatedConfig(
         algorithm=algo, num_devices=num_devices or dataset.num_devices,
         devices_per_round=devices_per_round, local_epochs=local_epochs,

@@ -209,6 +209,15 @@ class FederatedConfig:
     # rounds fused per scanned-driver dispatch; checkpoints / verbose
     # printing happen at chunk boundaries (0 -> one chunk per run)
     chunk_rounds: int = 32
+    # client-axis mesh size (core/sharding.py): the K-stacked local
+    # solves of the batched/scanned rounds shard over a 1-D JAX mesh
+    # ("device" axis) via shard_map, with aggregation as psum/pmean
+    # collectives.  1 (default) = no mesh, bit-exact pre-mesh programs;
+    # "auto" = all of jax.device_count(); an int is validated against
+    # the live device count at trainer/engine build (CPU story:
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8).  Requires
+    # the batched engine and a selection size divisible by the mesh.
+    mesh_devices: int | str = 1
     # federated environment (core/scenarios.py): any registered
     # ScenarioSpec name.  "ideal" (always-on devices, no stragglers,
     # full work) is structurally a no-op — every path keeps its exact
@@ -254,3 +263,13 @@ class FederatedConfig:
             raise ValueError(
                 f"partial_min_work must be in (0, 1], got "
                 f"{self.partial_min_work}")
+        # mesh_devices: shape-of-value check only — the device-count
+        # bound is runtime state, validated by core.sharding at
+        # trainer/engine build
+        if self.mesh_devices != "auto" and not (
+                isinstance(self.mesh_devices, int)
+                and not isinstance(self.mesh_devices, bool)
+                and self.mesh_devices >= 1):
+            raise ValueError(
+                f"mesh_devices must be a positive int or 'auto', got "
+                f"{self.mesh_devices!r}")

@@ -8,6 +8,8 @@ from repro.core.client import (LocalResult, gamma_inexactness,
 from repro.core.engine import RoundEngine, ScannedDriver, make_scanned_run
 from repro.core.scenarios import (ScenarioSpec, available_scenarios,
                                   register_scenario, scenario_spec)
+from repro.core.sharding import (DEVICE_AXIS, make_device_mesh, mesh_for,
+                                 resolve_mesh_devices)
 from repro.core.strategies import (AlgorithmSpec, algorithm_spec,
                                    available_algorithms,
                                    register_algorithm)
@@ -21,6 +23,8 @@ __all__ = [
     "available_algorithms",
     "ScenarioSpec", "register_scenario", "scenario_spec",
     "available_scenarios",
+    "DEVICE_AXIS", "make_device_mesh", "mesh_for",
+    "resolve_mesh_devices",
     "make_local_solver", "make_grad_fn", "make_exact_solver",
     "make_batched_solver", "make_batched_grad_fn",
     "gamma_inexactness", "LocalResult",

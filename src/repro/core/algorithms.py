@@ -71,6 +71,7 @@ import numpy as np
 from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
+from repro.core import sharding
 from repro.core.client import make_grad_fn, make_local_solver
 from repro.core.engine import RoundEngine, ScannedDriver
 from repro.core.scenarios import (availability_mask, env_channels,
@@ -90,6 +91,10 @@ TWO_ROUND_ALGOS = {name for name in available_algorithms()
 
 @dataclass
 class FederatedState:
+    """Mutable run state the host loop threads between rounds: global
+    params, round/communication counters, and whichever persistent
+    algorithm state the spec declares (``None`` when undeclared)."""
+
     params: Any
     round: int = 0
     comm_rounds: int = 0
@@ -116,6 +121,14 @@ class FederatedTrainer:
 
     def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
                  eval_fn: Optional[Callable] = None):
+        """Build the trainer: resolve the algorithm/scenario specs and
+        the mesh, pick the engine per ``cfg.engine`` (validating
+        mesh/engine/selection-size compatibility), and compile-cache
+        the local solver and gradient functions.
+
+        ``loss_fn(params, batch) -> scalar`` must be jit-traceable;
+        ``dataset`` follows the protocol in the class docstring.
+        """
         self.loss_fn = loss_fn
         self.dataset = dataset
         self.cfg = cfg
@@ -138,13 +151,41 @@ class FederatedTrainer:
         self.grad_fn = make_grad_fn(loss_fn)
         self._server_opt = make_server_opt(self.spec, cfg)
         self._state_fields = runtime_state_fields(self.spec, cfg)
+        # client-axis mesh (core/sharding.py): resolved HERE against the
+        # live jax.device_count() — configs are a leaf layer and cannot
+        # know it.  mesh_devices=1 (default) -> None -> every program
+        # below stays structurally pre-mesh.
+        self.mesh = sharding.mesh_for(cfg)
         engine = cfg.engine
         if engine == "auto":
-            engine = "batched" if jax.default_backend() != "cpu" else "loop"
+            # a requested mesh implies the batched SPMD round even on
+            # CPU (forced-host device meshes are the documented CPU
+            # story for parity/CI runs)
+            engine = ("batched"
+                      if jax.default_backend() != "cpu"
+                      or self.mesh is not None else "loop")
+        if engine == "loop" and self.mesh is not None:
+            raise ValueError(
+                "mesh_devices > 1 requires the batched engine: the "
+                "looped per-device reference path is single-device by "
+                "construction (set engine='batched' or 'auto', or "
+                "mesh_devices=1)")
+        if self.mesh is not None:
+            if self.spec.num_selections == 0:
+                sharding.check_divisible(
+                    dataset.num_devices, self.mesh,
+                    "num_devices (full-participation spec)")
+            else:
+                k = (cfg.devices_per_round
+                     if cfg.sample_with_replacement
+                     else min(cfg.devices_per_round,
+                              dataset.num_devices))
+                sharding.check_divisible(k, self.mesh,
+                                         "devices_per_round")
         if engine == "batched":
             self.engine: Optional[RoundEngine] = RoundEngine(
                 loss_fn, cfg, spec=self.spec,
-                num_devices=dataset.num_devices)
+                num_devices=dataset.num_devices, mesh=self.mesh)
         elif engine == "loop":
             self.engine = None
         else:
@@ -188,6 +229,9 @@ class FederatedTrainer:
         return stack_device_batches(self.dataset, indices)
 
     def init(self, params) -> FederatedState:
+        """Fresh :class:`FederatedState` at round 0 for ``params``,
+        with the spec's persistent state initialized per ``init_aux``
+        (host-loop layout: per-device control lists, unstacked)."""
         st = FederatedState(params=params)
         aux = init_aux(self.spec, self.cfg, params,
                        self.dataset.num_devices, stacked=False)
@@ -236,6 +280,15 @@ class FederatedTrainer:
     # -- the generic round ------------------------------------------------
 
     def round(self, st: FederatedState) -> FederatedState:
+        """Advance one federated round in place and return ``st``.
+
+        Samples the spec's selections, realizes the scenario
+        environment, and interprets the spec on the configured engine
+        (batched: one jitted — possibly mesh-sharded — round program;
+        loop: per-device reference dispatch).  Updates params,
+        counters, persistent algorithm state, and ``self.last_env``
+        (the (intended K, effective K) telemetry ``run()`` records).
+        """
         spec, cfg = self.spec, self.cfg
         w0 = st.params
         mu = cfg.mu if spec.use_mu else 0.0
@@ -419,6 +472,9 @@ class FederatedTrainer:
         return total / max(wsum, 1e-12)
 
     def measure_dissimilarity(self, params) -> float:
+        """B-local dissimilarity (paper Def. 2) at ``params``, measured
+        over ALL devices' full local gradients — the heterogeneity
+        instrumentation behind the §V analysis."""
         from repro.core.theory import b_dissimilarity
         grads = [self.grad_fn(params, self._batches(k))
                  for k in range(self.dataset.num_devices)]

@@ -34,6 +34,9 @@ from repro.core import pytree as pt
 
 
 class LocalResult(NamedTuple):
+    """One local solve's outcome: per-device leaves in the looped path,
+    K-stacked leaves from the batched solvers."""
+
     params: Any           # w_k^t
     delta: Any            # w_k^t - w^{t-1}
     num_steps: jnp.ndarray

@@ -87,6 +87,21 @@ but here the whole driver falls back); a spec's ``decay(cfg, t)`` is
 computed from the traced round index, and per-round ``comm_rounds`` is
 reconstructed host-side (it is a deterministic ``comm_per_round * t``
 ramp).
+
+Mesh-sharded rounds
+-------------------
+Both the per-round program and the scanned chunk program optionally run
+their stacked client axis over a 1-D JAX mesh (``core/sharding.py``;
+``FederatedConfig.mesh_devices``): the generic round body is wrapped in
+``shard_map`` (``_shard_wrap``) so each of the D mesh devices solves
+K/D clients, with every cross-client reduction — ``mean_k``, the masked
+scenario reductions, the server pseudo-gradient aggregate, control
+deltas, telemetry counts — expressed as psum/pmean collectives.  The
+whole round (or whole chunk of rounds) stays ONE jitted SPMD program;
+K must divide evenly over the mesh (checked early, with a clear error)
+so sharded aggregation is exactly the K-mean.  ``mesh_devices=1``
+builds no mesh: every program in this module is then structurally the
+pre-mesh build, bit-identical.  Parity gate: tests/test_sharding.py.
 """
 from __future__ import annotations
 
@@ -99,6 +114,7 @@ import numpy as np
 from repro.configs.base import FederatedConfig
 from repro.core import pytree as pt
 from repro.core import server
+from repro.core import sharding
 from repro.core.client import make_batched_grad_fn, make_batched_solver
 from repro.core.scenarios import (availability_mask, env_channels,
                                   is_trivial, realize_env, scenario_spec)
@@ -106,6 +122,11 @@ from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
                                    algorithm_spec, init_aux,
                                    make_server_opt, runtime_state_fields)
 from repro.data.batching import stack_device_batches, stack_eval_batches
+from repro.launch.mesh import shard_map_compat
+
+#: Sentinel for "derive the mesh from ``cfg.mesh_devices``" (the
+#: default) vs. an explicit ``mesh=None`` / ``mesh=Mesh`` override.
+_MESH_FROM_CFG = object()
 
 
 def _donate_argnums(nums: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -151,11 +172,28 @@ class RoundEngine:
 
     def __init__(self, loss_fn: Callable, cfg: FederatedConfig,
                  spec: Optional[AlgorithmSpec] = None,
-                 num_devices: Optional[int] = None):
+                 num_devices: Optional[int] = None,
+                 mesh=_MESH_FROM_CFG):
+        """Build (and jit) the round programs for one algorithm spec.
+
+        ``loss_fn(params, batch) -> scalar`` (jit-traceable);
+        ``num_devices``: total client count N, required by specs with
+        control variates; ``mesh``: an explicit client-axis mesh, or
+        ``None`` to force the single-device program — by default the
+        mesh is derived from ``cfg.mesh_devices`` (core/sharding.py).
+        """
         self.cfg = cfg
         self.spec = spec if spec is not None else algorithm_spec(
             cfg.algorithm)
         self.num_devices = num_devices
+        # mesh over the stacked client axis (core/sharding.py): derived
+        # from cfg.mesh_devices unless the caller passes one (or None to
+        # force the single-device program).  With a mesh, the round body
+        # runs under shard_map and aggregation becomes psum/pmean
+        # collectives; without one, the programs below are structurally
+        # the exact pre-mesh build (bit-identical numerics).
+        self.mesh = sharding.mesh_for(cfg) if mesh is _MESH_FROM_CFG \
+            else mesh
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs)
@@ -187,6 +225,15 @@ class RoundEngine:
                 f"spec {spec.name!r} updates control variates; "
                 f"RoundEngine needs num_devices")
         n_dev = float(self.num_devices or 0)
+        # Under a mesh the body below runs PER SHARD inside shard_map:
+        # stacked leaves hold K/shards clients, cross-client reductions
+        # go through psum/pmean over `axis`, and trace-static global
+        # counts are local_count * shards.  axis=None (no mesh) keeps
+        # every expression exactly pre-mesh.
+        mesh = self.mesh
+        axis = sharding.DEVICE_AXIS if mesh is not None else None
+        shards = mesh.shape[sharding.DEVICE_AXIS] if mesh is not None \
+            else 1
 
         def round_core(w0, aux, phase_a, batches, valid, decay,
                        active, work, active_a):
@@ -199,19 +246,22 @@ class RoundEngine:
                     # selection; with none available there is no
                     # correction to broadcast (grad_ok zeros it below)
                     zeros = pt.zeros_like(w0)
-                    grad_ok = (active_a.sum() > 0).astype(jnp.float32)
+                    avail_n = active_a.sum()
+                    if axis is not None:
+                        avail_n = jax.lax.psum(avail_n, axis)
+                    grad_ok = (avail_n > 0).astype(jnp.float32)
                 if phase_a is None:
                     # shared selection: one gradient pass serves the
                     # gather AND the per-device corrections
                     g_local = self._grads(w0, batches, valid)
                     g_global = (server.aggregate_stacked_masked(
-                        g_local, active_a, zeros) if with_env
-                        else server.aggregate_stacked(g_local))
+                        g_local, active_a, zeros, axis) if with_env
+                        else server.aggregate_stacked(g_local, axis))
                 else:
                     ga = self._grads(w0, phase_a[0], phase_a[1])
                     g_global = (server.aggregate_stacked_masked(
-                        ga, active_a, zeros) if with_env
-                        else server.aggregate_stacked(ga))
+                        ga, active_a, zeros, axis) if with_env
+                        else server.aggregate_stacked(ga, axis))
                     if spec.local_grad:
                         g_local = self._grads(w0, batches, valid)
             elif spec.grad_source == "stale":
@@ -239,17 +289,18 @@ class RoundEngine:
                 res = self._solver_env(w0, corr, mu, batches, valid,
                                        nsteps)
                 w_agg = server.aggregate_stacked_masked(
-                    res.params, active, w0)
+                    res.params, active, w0, axis)
             else:
                 res = self._solver(w0, corr, mu, batches, valid)
-                w_agg = server.aggregate_stacked(res.params)
+                w_agg = server.aggregate_stacked(res.params, axis)
 
             new = dict(aux)
             if spec.updates_g_prev:
                 new["g_prev"] = (
                     server.aggregate_stacked_masked(
-                        g_local, active, aux["g_prev"])
-                    if with_env else server.aggregate_stacked(g_local))
+                        g_local, active, aux["g_prev"], axis)
+                    if with_env
+                    else server.aggregate_stacked(g_local, axis))
             if spec.control_update is not None:
                 c_new = spec.control_update(ControlCtx(
                     c_local=aux["controls"], c_server=aux["c_server"],
@@ -268,13 +319,17 @@ class RoundEngine:
                     delta_sum = jax.tree_util.tree_map(
                         lambda n, o: (n - o).sum(axis=0),
                         c_new, aux["controls"])
+                    if axis is not None:
+                        delta_sum = jax.tree_util.tree_map(
+                            lambda d: jax.lax.psum(d, axis), delta_sum)
                     new["c_server"] = jax.tree_util.tree_map(
                         lambda cs, d: cs + d / n_dev,
                         aux["c_server"], delta_sum)
                 else:
                     delta = server.aggregate_stacked(
-                        pt.sub(c_new, aux["controls"]))   # (1/K) sum_k
-                    k = jnp.float32(valid.shape[0])
+                        pt.sub(c_new, aux["controls"]),
+                        axis)                             # (1/K) sum_k
+                    k = jnp.float32(valid.shape[0] * shards)
                     new["c_server"] = jax.tree_util.tree_map(
                         lambda cs, d: cs + d * (k / n_dev),
                         aux["c_server"], delta)
@@ -287,18 +342,68 @@ class RoundEngine:
                 new["center"] = spec.center_update(
                     aux["center"], w_out, cfg)
             if with_env:
-                k = jnp.float32(valid.shape[0])
+                k = jnp.float32(valid.shape[0] * shards)
                 eff = active.sum()
+                if axis is not None:
+                    eff = jax.lax.psum(eff, axis)
                 stats = {"intended_k": k, "effective_k": eff,
                          "dropped": k - eff}
                 return w_out, new, stats
             return w_out, new
 
+        if mesh is not None:
+            return self._shard_wrap(round_core, with_env)
         if with_env:
             return round_core
         return lambda w0, aux, phase_a, batches, valid, decay: \
             round_core(w0, aux, phase_a, batches, valid, decay,
                        None, None, None)
+
+    def _shard_wrap(self, round_core: Callable,
+                    with_env: bool) -> Callable:
+        """Wrap ``round_core`` in a ``shard_map`` over the client axis.
+
+        The wrapper is applied at trace time (per jit specialization),
+        so the in/out specs can follow the actual argument structure:
+        K-stacked tensors (batches, valid, per-client ``controls``,
+        phase-A stacks, env masks) shard on their leading axis; global
+        state (``w0``, ``g_prev``, ``c_server``, ``center``, opt state,
+        ``decay``) and every output the server consumes replicate.
+        Inside, cross-client reductions are psum/pmean collectives (see
+        ``round_core``), so the whole round remains one SPMD program.
+        """
+        mesh = self.mesh
+        dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+
+        def wrapped(w0, aux, phase_a, batches, valid, decay,
+                    active=None, work=None, active_a=None):
+            sharding.check_divisible(valid.shape[0], mesh,
+                                     "stacked selection size")
+            aux_spec = {f: (dev if f == "controls" else rep)
+                        for f in aux}
+            phase_spec = None if phase_a is None else (dev, dev)
+            env = (active, work, active_a)
+            env_specs = tuple(None if x is None else dev for x in env)
+            in_specs = (rep, aux_spec, phase_spec, dev, dev,
+                        rep) + env_specs
+            out_specs: Tuple = (rep, aux_spec, rep) if with_env \
+                else (rep, aux_spec)
+            body = round_core if with_env else (
+                lambda w0_, aux_, pa_, b_, v_, d_:
+                round_core(w0_, aux_, pa_, b_, v_, d_,
+                           None, None, None))
+            if not with_env:
+                in_specs, env = in_specs[:6], ()
+            f = shard_map_compat(
+                body, mesh, in_specs=in_specs, out_specs=out_specs,
+                manual_axes=(sharding.DEVICE_AXIS,))
+            return f(w0, aux, phase_a, batches, valid,
+                     jnp.asarray(decay, jnp.float32), *env)
+
+        if with_env:
+            return wrapped
+        return lambda w0, aux, phase_a, batches, valid, decay: \
+            wrapped(w0, aux, phase_a, batches, valid, decay)
 
 
 def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
@@ -337,6 +442,15 @@ class ScannedDriver:
 
     def __init__(self, loss_fn: Callable, dataset, cfg: FederatedConfig,
                  engine: Optional[RoundEngine] = None):
+        """Pre-stack the dataset and build the jitted chunk programs.
+
+        ``dataset`` follows the ``FederatedTrainer`` protocol;
+        ``engine`` shares an already-built :class:`RoundEngine` (and
+        its jit caches + mesh) — by default one is built from ``cfg``.
+        Raises for spec/config combinations the scanned scatter cannot
+        express (control variates with replacement) and for selection
+        sizes that cannot shard evenly over a requested mesh.
+        """
         self.spec = algorithm_spec(cfg.algorithm)
         if self.spec.control_update is not None and \
                 cfg.sample_with_replacement:
@@ -350,6 +464,19 @@ class ScannedDriver:
             loss_fn, cfg, spec=self.spec,
             num_devices=dataset.num_devices)
         self.num_devices = dataset.num_devices
+        #: client-axis mesh (core/sharding.py), owned by the engine so
+        #: both per-round and scanned programs share one layout choice
+        self.mesh = self.engine.mesh
+        if self.mesh is not None:
+            if self.spec.num_selections == 0:
+                sharding.check_divisible(
+                    self.num_devices, self.mesh,
+                    "num_devices (full-participation spec)")
+            else:
+                k = (cfg.devices_per_round if cfg.sample_with_replacement
+                     else min(cfg.devices_per_round, self.num_devices))
+                sharding.check_divisible(k, self.mesh,
+                                         "devices_per_round")
         # federated-environment scenario: realized on device inside the
         # scan body (availability/latency/dropout uniforms drawn from
         # the carried PRNG key).  The trivial "ideal" spec keeps the
@@ -361,6 +488,18 @@ class ScannedDriver:
         self.batches_all, self.valid_all = stack_device_batches(
             dataset, np.arange(self.num_devices))
         eb, ev, ew = stack_eval_batches(dataset)
+        if self.mesh is not None:
+            # lay the big all-client tensors out along the mesh up
+            # front (leading-axis NamedSharding when N divides evenly,
+            # replicated otherwise) so the chunk program starts from
+            # the layout the shard-mapped round body wants instead of
+            # re-sharding per round
+            self.batches_all = sharding.shard_stacked(self.batches_all,
+                                                      self.mesh)
+            self.valid_all = sharding.shard_stacked(self.valid_all,
+                                                    self.mesh)
+            eb = sharding.shard_stacked(eb, self.mesh)
+            ev = sharding.shard_stacked(ev, self.mesh)
         self._eval_loss = _make_stacked_eval(loss_fn, eb, ev, ew)
         self.probs = (jnp.asarray(dataset.weights, jnp.float32)
                       if cfg.weighted_sampling else None)
@@ -504,10 +643,17 @@ class ScannedDriver:
     # -- host-side chunked run --------------------------------------------
 
     def _init_carry(self, params) -> Dict[str, Any]:
+        """The scan carry: params + PRNG key + the spec's persistent
+        state (``init_aux``, stacked layout).  Under a mesh, the
+        ``(N, ...)`` control stack is placed leading-axis-sharded so
+        the carry keeps the round body's layout across chunks."""
         carry = {"params": params,
                  "key": jax.random.PRNGKey(self.cfg.seed)}
         carry.update(init_aux(self.spec, self.cfg, params,
                               self.num_devices, stacked=True))
+        if self.mesh is not None and "controls" in carry:
+            carry["controls"] = sharding.shard_stacked(
+                carry["controls"], self.mesh)
         return carry
 
     def run(self, params, num_rounds: int, eval_every: int = 1,

@@ -1,4 +1,10 @@
-"""Pytree arithmetic used throughout the federated core."""
+"""Pytree arithmetic used throughout the federated core.
+
+Every helper maps a leaf-wise jnp op over arbitrary parameter pytrees
+(and broadcasts, so one definition serves both per-device leaves and
+the batched paths' K-stacked leaves — the polymorphic-shape convention
+of ``strategies/spec.py``).  All helpers are traceable under jit.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,14 +14,17 @@ tmap = jax.tree_util.tree_map
 
 
 def add(a, b):
+    """Leaf-wise ``a + b`` over matching pytrees (broadcasting)."""
     return tmap(jnp.add, a, b)
 
 
 def sub(a, b):
+    """Leaf-wise ``a - b`` over matching pytrees (broadcasting)."""
     return tmap(jnp.subtract, a, b)
 
 
 def scale(a, s):
+    """Leaf-wise ``a * s`` for a scalar (python or traced) ``s``."""
     return tmap(lambda x: x * s, a)
 
 
@@ -25,19 +34,23 @@ def axpy(alpha, x, y):
 
 
 def zeros_like(a):
+    """A pytree of zeros with ``a``'s leaf shapes and dtypes."""
     return tmap(jnp.zeros_like, a)
 
 
 def dot(a, b):
+    """Full inner product ``<a, b>`` summed over every leaf element."""
     leaves = tmap(lambda x, y: jnp.vdot(x, y), a, b)
     return sum(jax.tree_util.tree_leaves(leaves))
 
 
 def norm_sq(a):
+    """Squared l2 norm ``||a||^2`` over all leaf elements."""
     return dot(a, a)
 
 
 def norm(a):
+    """l2 norm ``||a||`` over all leaf elements."""
     return jnp.sqrt(norm_sq(a))
 
 
@@ -50,6 +63,8 @@ def mean(trees):
 
 
 def weighted_mean(trees, weights):
+    """``sum_i (w_i / sum(w)) * tree_i`` for a list of pytrees and a
+    matching list of (host) scalar weights."""
     total = float(sum(weights))
     acc = scale(trees[0], weights[0] / total)
     for t, w in zip(trees[1:], weights[1:]):

@@ -96,16 +96,30 @@ def aggregate_gradients(grads: List) -> object:
     return pt.mean(grads)
 
 
-def aggregate_stacked(tree) -> object:
+def aggregate_stacked(tree, axis_name: Optional[str] = None) -> object:
     """Mean over a leading device axis of a stacked pytree — the batched
     round engine's form of ``aggregate_mean``/``aggregate_gradients``
-    (stays on device, no per-update host transfers)."""
+    (stays on device, no per-update host transfers).
+
+    ``axis_name``: inside a ``shard_map`` over the client axis
+    (core/sharding.py), the stacked leaves hold only this shard's K/D
+    rows; the local mean is then ``pmean``-ed over the named mesh axis.
+    Shards carry equal row counts (engine-enforced divisibility), so
+    the mean-of-shard-means equals the global mean exactly (to float
+    association).  ``None`` (single-device) is the pre-mesh program,
+    bit-identical.
+    """
     import jax
 
-    return jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)
+    out = jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)
+    if axis_name is not None:
+        out = jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x, axis_name), out)
+    return out
 
 
-def aggregate_stacked_masked(tree, active, fallback) -> object:
+def aggregate_stacked_masked(tree, active, fallback,
+                             axis_name: Optional[str] = None) -> object:
     """Scenario-aware ``aggregate_stacked``: mean over the devices with
     ``active[k] == 1`` only (stacked leading axis K, ``active`` a float
     0/1 ``(K,)`` vector).  Inactive rows contribute exact zeros, so the
@@ -113,16 +127,27 @@ def aggregate_stacked_masked(tree, active, fallback) -> object:
     When NO device is active the round has nothing to aggregate and
     ``fallback`` (an unstacked pytree — ``w0`` for params, the carried
     value for state) is returned instead.  Traceable.
+
+    ``axis_name``: as in :func:`aggregate_stacked` — under ``shard_map``
+    the masked partial sums (numerator AND active count) are ``psum``-ed
+    over the mesh axis before the division, so the global masked mean
+    (and the no-active-device fallback decision) is exact regardless of
+    how the active clients distribute over shards.
     """
     import jax
     import jax.numpy as jnp
 
     asum = active.sum()
+    if axis_name is not None:
+        asum = jax.lax.psum(asum, axis_name)
     denom = jnp.maximum(asum, 1.0)
 
     def mmean(x, fb):
         a = active.reshape(active.shape + (1,) * (x.ndim - 1))
-        return jnp.where(asum > 0, (x * a).sum(axis=0) / denom, fb)
+        s = (x * a).sum(axis=0)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        return jnp.where(asum > 0, s / denom, fb)
 
     return jax.tree_util.tree_map(mmean, tree, fallback)
 

@@ -1,0 +1,155 @@
+"""Device-mesh sharding for federated rounds (the `"device"` axis).
+
+The paper's setting is massively distributed remote *clients*; the
+simulation's dominant cost is the K stacked local solves each round.
+Every jitted round program stacks those solves on a leading device axis
+(``RoundEngine``; ``ScannedDriver`` scans whole rounds of them) — and
+that axis is embarrassingly parallel.  This module maps it onto a JAX
+mesh:
+
+- :func:`make_device_mesh` builds a 1-D mesh whose single axis,
+  :data:`DEVICE_AXIS`, carries the stacked federated clients (the name
+  refers to the paper's "remote devices", which the simulation shards
+  over the *hardware* devices of the mesh — K/D clients per chip).
+- :func:`stacked_spec` / :func:`replicated_spec` are the two
+  ``PartitionSpec`` layouts every round tensor falls into: K-stacked
+  batch tensors, per-client solver states and ``(K,)`` masks shard on
+  their leading axis; global state (params ``w0``, ``g_prev``,
+  ``c_server``, ``center``, server-opt state) replicates.
+- :func:`shard_stacked` / :func:`replicate` place concrete arrays
+  (the scanned driver's all-device ``(N, ...)`` batch tensors and
+  control carries) so the chunk program starts from the layout the
+  shard-mapped round body wants.
+
+``core/engine.py`` wraps the round body in ``shard_map`` over this mesh
+(via the version-compat helpers in ``launch/mesh.py``) and expresses
+every cross-client reduction — ``mean_k``, masked scenario reductions,
+the server pseudo-gradient step's aggregate — as ``psum`` / ``pmean``
+collectives, so the whole round stays ONE jitted SPMD program.
+
+Resolution contract
+-------------------
+``FederatedConfig.mesh_devices`` is ``1`` (no mesh — every path keeps
+its exact pre-mesh program, bit-identical numerics), a positive int
+(validated against ``jax.device_count()`` at trainer/engine build, not
+at config construction — configs are a leaf layer with no device
+state), or ``"auto"`` (all visible devices).  On CPU-only hosts, run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get an
+8-way mesh of host threads — that is how the parity tests and the CI
+docs/bench jobs exercise the sharded path without accelerators.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: Name of the mesh axis carrying the stacked federated clients.
+DEVICE_AXIS = "device"
+
+#: The hint appended to every "not enough devices" error.
+_CPU_HINT = ("on a CPU-only host, set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=<n> before the "
+             "first JAX import to split the host into <n> devices")
+
+
+def resolve_mesh_devices(mesh_devices) -> int:
+    """Resolve a ``FederatedConfig.mesh_devices`` value to a mesh size.
+
+    ``"auto"`` resolves to ``jax.device_count()``; an int is validated
+    against it (``1 <= mesh_devices <= device_count``).  Returns the
+    resolved int; ``1`` means "no mesh" everywhere downstream.
+    """
+    avail = jax.device_count()
+    if mesh_devices == "auto":
+        return avail
+    if isinstance(mesh_devices, bool) or not isinstance(
+            mesh_devices, int):
+        raise ValueError(
+            f"mesh_devices must be a positive int or 'auto', got "
+            f"{mesh_devices!r}")
+    n = mesh_devices
+    if n < 1:
+        raise ValueError(f"mesh_devices must be >= 1, got {n}")
+    if n > avail:
+        raise ValueError(
+            f"mesh_devices={n} exceeds jax.device_count()={avail}; "
+            f"{_CPU_HINT}")
+    return n
+
+
+def make_device_mesh(num_devices: int) -> Mesh:
+    """A 1-D mesh of ``num_devices`` devices with the single axis
+    :data:`DEVICE_AXIS` — the layout every sharded round program uses."""
+    return jax.make_mesh((num_devices,), (DEVICE_AXIS,))
+
+
+def mesh_for(cfg) -> Optional[Mesh]:
+    """The mesh a ``FederatedConfig`` asks for, or ``None``.
+
+    Resolves ``cfg.mesh_devices`` (validating against the live device
+    count) and returns ``None`` at 1 — the single-device programs are
+    kept structurally untouched, not run under a trivial mesh, so
+    ``mesh_devices=1`` stays bit-exact with the pre-mesh build.
+    """
+    n = resolve_mesh_devices(getattr(cfg, "mesh_devices", 1))
+    return None if n == 1 else make_device_mesh(n)
+
+
+def stacked_spec() -> PartitionSpec:
+    """Leading-axis layout for K-stacked round tensors (batch stacks,
+    per-client solver state, ``(K,)`` masks): each mesh device holds
+    K/D clients' rows."""
+    return PartitionSpec(DEVICE_AXIS)
+
+
+def replicated_spec() -> PartitionSpec:
+    """Fully-replicated layout for global round state (``w0``,
+    ``g_prev``, ``c_server``, ``center``, opt state, scalars)."""
+    return PartitionSpec()
+
+
+def stacked_sharding(mesh: Mesh) -> NamedSharding:
+    """:func:`stacked_spec` bound to ``mesh`` for ``jax.device_put``."""
+    return NamedSharding(mesh, stacked_spec())
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """:func:`replicated_spec` bound to ``mesh`` for ``jax.device_put``."""
+    return NamedSharding(mesh, replicated_spec())
+
+
+def check_divisible(k: int, mesh: Mesh, what: str) -> None:
+    """Raise if a stacked axis of size ``k`` cannot shard evenly over
+    ``mesh`` — sharded rounds keep exact parity by giving every mesh
+    device the same number of clients."""
+    d = mesh.shape[DEVICE_AXIS]
+    if k % d != 0:
+        raise ValueError(
+            f"{what}={k} is not divisible by mesh_devices={d}; the "
+            f"sharded round program gives each mesh device k/D clients "
+            f"— pick a selection size (or mesh size) with k % D == 0")
+
+
+def shard_stacked(tree, mesh: Mesh):
+    """Place a stacked pytree with its leading axis over the mesh.
+
+    Leaves whose leading axis does not divide evenly (e.g. an ``(N,
+    ...)`` all-client carry with ``N % D != 0``) are replicated instead
+    — layout is a performance choice, never a correctness constraint
+    outside the shard-mapped round body itself.
+    """
+    d = mesh.shape[DEVICE_AXIS]
+    st, rep = stacked_sharding(mesh), replicated_sharding(mesh)
+
+    def put(x):
+        ok = getattr(x, "ndim", 0) >= 1 and x.shape[0] % d == 0
+        return jax.device_put(x, st if ok else rep)
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+def replicate(tree, mesh: Mesh):
+    """Place a pytree fully replicated over the mesh."""
+    return jax.device_put(tree, replicated_sharding(mesh))

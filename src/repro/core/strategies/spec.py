@@ -241,6 +241,8 @@ def algorithm_spec(name: str) -> AlgorithmSpec:
 
 
 def validate_server_opt(name: str) -> None:
+    """Raise ``ValueError`` unless ``name`` is a known server-optimizer
+    family (:data:`SERVER_OPTS`) — config-construction validation."""
     if name not in SERVER_OPTS:
         raise ValueError(
             f"unknown server_opt {name!r}; choose from "

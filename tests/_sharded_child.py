@@ -1,0 +1,138 @@
+"""Child process for tests/test_sharding.py's 8-way mesh parity suite.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+parent test sets it): JAX device counts are fixed at first backend
+init, so an 8-device CPU mesh can only be exercised in a process of its
+own — exactly the documented CPU story for the sharded path.
+
+Checks, all at atol 1e-5 over 3 rounds with injected selections:
+
+- every registered algorithm: batched engine, ``mesh_devices=8`` vs
+  ``mesh_devices=1`` (final params AND loss history);
+- the scanned driver for a two-phase, a control-variate, and a
+  full-participation spec;
+- one non-ideal scenario (``bernoulli`` availability) under both
+  drivers — masked aggregation via psum collectives — including the
+  realized ``effective_k`` telemetry;
+- ``mesh_devices="auto"`` resolves to the full 8-way mesh;
+- the error paths that need >1 device: indivisible selection size and
+  the loop-engine conflict.
+
+Prints ``SHARDED-PARITY-OK`` on success; any failure raises (nonzero
+exit) with the offending algorithm in the message.
+"""
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer, available_algorithms
+from repro.core.sharding import resolve_mesh_devices
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ATOL = 1e-5
+N, K, ROUNDS = 16, 8, 3
+
+
+def leaves_maxdiff(a, b) -> float:
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def main() -> None:
+    assert jax.device_count() == 8, (
+        f"child needs the 8-device host flag, got {jax.device_count()}")
+    assert resolve_mesh_devices("auto") == 8
+
+    dataset = make_synthetic(1, 1, num_devices=N, seed=0)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    sel = np.stack([np.stack([(np.arange(K) + t) % N,
+                              (np.arange(K) + t + 4) % N])
+                    for t in range(ROUNDS)])
+
+    def run(algo, mesh_devices, driver="python", **kw):
+        cfg = FederatedConfig(
+            algorithm=algo, num_devices=N, devices_per_round=K,
+            local_epochs=2, learning_rate=0.01, mu=0.001, seed=3,
+            engine="batched", round_driver=driver, chunk_rounds=ROUNDS,
+            mesh_devices=mesh_devices, **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        return tr.run(params, ROUNDS, selections=sel)
+
+    for algo in available_algorithms():
+        h1, f1 = run(algo, 1)
+        h8, f8 = run(algo, 8)
+        dmax = leaves_maxdiff(f1, f8)
+        ldiff = float(np.abs(np.asarray(h1["loss"])
+                             - np.asarray(h8["loss"])).max())
+        assert dmax < ATOL and ldiff < ATOL, (
+            f"{algo}: sharded batched round diverged "
+            f"(params {dmax:.2e}, loss {ldiff:.2e})")
+        print(f"ok batched {algo}: params {dmax:.2e} loss {ldiff:.2e}")
+
+    for algo in ("feddane", "scaffold", "inexact_dane"):
+        _, f1 = run(algo, 1, driver="scan")
+        _, f8 = run(algo, 8, driver="scan")
+        dmax = leaves_maxdiff(f1, f8)
+        assert dmax < ATOL, f"{algo}: sharded scan diverged ({dmax:.2e})"
+        print(f"ok scan {algo}: params {dmax:.2e}")
+
+    # mesh_devices="auto" == the explicit full mesh, to the bit
+    _, f8 = run("feddane", 8)
+    _, fa = run("feddane", "auto")
+    assert leaves_maxdiff(f8, fa) == 0.0, "auto mesh != explicit 8"
+    print("ok auto == 8")
+
+    # non-ideal scenario: masked psum aggregation + telemetry.  With
+    # injected selections, the host driver's env uniforms are the only
+    # rng consumption, so both mesh settings realize identical
+    # environments; the scan driver draws from the carried key (same
+    # seed both runs).
+    for driver in ("python", "scan"):
+        h1, f1 = run("feddane", 1, driver=driver,
+                     scenario="bernoulli", avail_prob=0.6)
+        h8, f8 = run("feddane", 8, driver=driver,
+                     scenario="bernoulli", avail_prob=0.6)
+        dmax = leaves_maxdiff(f1, f8)
+        assert dmax < ATOL, (
+            f"bernoulli/{driver}: sharded env round diverged "
+            f"({dmax:.2e})")
+        assert h1["effective_k"] == h8["effective_k"], (
+            f"bernoulli/{driver}: telemetry diverged "
+            f"{h1['effective_k']} vs {h8['effective_k']}")
+        assert any(e < K for e in h8["effective_k"]), (
+            "bernoulli at 0.6 never thinned a round — scenario inert?")
+        print(f"ok bernoulli {driver}: params {dmax:.2e} "
+              f"eff_k {h8['effective_k']}")
+
+    # error paths that need a real multi-device mesh
+    cfg = FederatedConfig(algorithm="fedavg", num_devices=N,
+                          devices_per_round=6, engine="batched",
+                          mesh_devices=8)
+    try:
+        FederatedTrainer(logreg_loss, dataset, cfg)
+    except ValueError as e:
+        assert "divisible" in str(e), e
+        print("ok indivisible K raises")
+    else:
+        raise AssertionError("K=6 over an 8-mesh did not raise")
+    cfg = FederatedConfig(algorithm="fedavg", num_devices=N,
+                          devices_per_round=K, engine="loop",
+                          mesh_devices=8)
+    try:
+        FederatedTrainer(logreg_loss, dataset, cfg)
+    except ValueError as e:
+        assert "batched engine" in str(e), e
+        print("ok loop-engine conflict raises")
+    else:
+        raise AssertionError("engine='loop' + mesh did not raise")
+
+    print("SHARDED-PARITY-OK")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

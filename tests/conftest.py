@@ -1,9 +1,12 @@
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
 
 # Smoke tests and benches run on the single real CPU device; ONLY
-# launch/dryrun.py forces 512 placeholder devices (in its own process).
+# launch/dryrun.py forces 512 placeholder devices (in its own process)
+# and tests/_sharded_child.py forces 8 (likewise its own process).
 
 
 def pytest_addoption(parser):
@@ -21,6 +24,52 @@ def update_golden(request):
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def docs_sandbox(monkeypatch):
+    """Sandbox for executing documentation snippets (tests/test_docs.py).
+
+    Two jobs:
+
+    - **registry isolation**: snapshot the algorithm and scenario
+      registries and restore them afterwards, so cookbook snippets that
+      ``register_*`` fresh specs never leak into (or collide across)
+      other tests in the same process;
+    - **tiny-config clamp**: docs show realistic knob values (50
+      rounds, 20 local epochs); executing them verbatim would make the
+      docs suite minutes long.  ``FederatedTrainer`` is patched so any
+      snippet run caps at 3 rounds and 2 local epochs — snippets
+      assert *structure* (finite losses, telemetry shapes), never
+      absolute numerics, so the clamp cannot mask a docs regression.
+    """
+    from repro.core import algorithms as algomod
+    from repro.core.scenarios import spec as scn_spec
+    from repro.core.strategies import spec as strat_spec
+
+    saved_algos = dict(strat_spec._REGISTRY)
+    saved_scens = dict(scn_spec._REGISTRY)
+
+    orig_init = algomod.FederatedTrainer.__init__
+    orig_run = algomod.FederatedTrainer.run
+
+    def clamped_init(self, loss_fn, dataset, cfg, eval_fn=None):
+        if cfg.local_epochs > 2:
+            cfg = dataclasses.replace(cfg, local_epochs=2)
+        orig_init(self, loss_fn, dataset, cfg, eval_fn=eval_fn)
+
+    def clamped_run(self, params, num_rounds, *args, **kwargs):
+        return orig_run(self, params, min(num_rounds, 3), *args,
+                        **kwargs)
+
+    monkeypatch.setattr(algomod.FederatedTrainer, "__init__",
+                        clamped_init)
+    monkeypatch.setattr(algomod.FederatedTrainer, "run", clamped_run)
+    yield
+    strat_spec._REGISTRY.clear()
+    strat_spec._REGISTRY.update(saved_algos)
+    scn_spec._REGISTRY.clear()
+    scn_spec._REGISTRY.update(saved_scens)
 
 
 def leaves_allclose(a, b, atol):

@@ -1,0 +1,201 @@
+"""Mesh-sharded round tests (core/sharding.py + the sharded engine).
+
+Two layers:
+
+- in-process: ``mesh_devices`` resolution/validation semantics and the
+  structural guarantee that ``mesh_devices=1`` builds NO mesh — the
+  single-device programs stay byte-for-byte the pre-mesh build (their
+  numerics are pinned separately by tests/golden/ via test_scenarios).
+- subprocess (``_sharded_child.py``): the 8-way CPU-mesh parity suite.
+  Device counts freeze at first backend init, so the forced-host
+  8-device run — every registered algorithm, both drivers, a bernoulli
+  scenario, injected selections, atol 1e-5 vs the single-device batched
+  engine — needs its own process with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer, sharding
+from repro.core.engine import RoundEngine
+from repro.data import make_synthetic
+from repro.models.small import logreg_loss
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -- resolution & validation (single-device host) --------------------------
+
+def test_resolve_identity_and_auto():
+    assert sharding.resolve_mesh_devices(1) == 1
+    assert sharding.resolve_mesh_devices("auto") == jax.device_count()
+
+
+@pytest.mark.parametrize("bad", [0, -3, "many", 2.5, None])
+def test_resolve_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        sharding.resolve_mesh_devices(bad)
+
+
+def test_resolve_rejects_oversubscription():
+    too_many = jax.device_count() + 1
+    with pytest.raises(ValueError) as e:
+        sharding.resolve_mesh_devices(too_many)
+    # the error must teach the CPU recipe
+    assert "xla_force_host_platform_device_count" in str(e.value)
+
+
+@pytest.mark.parametrize("bad", [0, -1, True, 1.5, "all"])
+def test_config_rejects_bad_mesh_devices(bad):
+    with pytest.raises(ValueError):
+        FederatedConfig(mesh_devices=bad)
+
+
+def test_config_accepts_auto_and_ints():
+    assert FederatedConfig(mesh_devices="auto").mesh_devices == "auto"
+    assert FederatedConfig(mesh_devices=4).mesh_devices == 4
+
+
+def test_oversized_mesh_fails_at_trainer_build():
+    dataset = make_synthetic(1, 1, num_devices=8, seed=0)
+    cfg = FederatedConfig(algorithm="fedavg", num_devices=8,
+                          devices_per_round=4, engine="batched",
+                          mesh_devices=jax.device_count() + 1)
+    with pytest.raises(ValueError):
+        FederatedTrainer(logreg_loss, dataset, cfg)
+
+
+# -- mesh_devices=1 is structurally the pre-mesh build ---------------------
+
+def test_mesh_devices_one_builds_no_mesh():
+    assert sharding.mesh_for(FederatedConfig(mesh_devices=1)) is None
+    cfg = FederatedConfig(algorithm="feddane", mesh_devices=1)
+    eng = RoundEngine(logreg_loss, cfg, num_devices=30)
+    assert eng.mesh is None
+
+
+def test_auto_on_single_device_builds_no_mesh():
+    if jax.device_count() != 1:
+        pytest.xfail("host has multiple devices; auto legitimately "
+                     "builds a mesh here")
+    assert sharding.mesh_for(FederatedConfig(mesh_devices="auto")) is None
+
+
+def test_check_divisible():
+    mesh = sharding.make_device_mesh(1)
+    sharding.check_divisible(7, mesh, "k")  # 1 divides everything
+    # shard_stacked falls back to replication on indivisible axes
+    import jax.numpy as jnp
+    out = sharding.shard_stacked({"a": jnp.ones((7, 3))}, mesh)
+    assert out["a"].shape == (7, 3)
+    rep = sharding.replicate({"a": jnp.ones((7, 3))}, mesh)
+    assert rep["a"].sharding.is_fully_replicated
+
+
+# -- a trivial 1-device mesh runs the full sharded program in-process ------
+
+def _run_pair(algo, mesh, rounds=2, **cfg_kw):
+    """(history, final) under an explicit mesh vs. the plain program,
+    same injected selections — the shard_map program itself (psum /
+    pmean collectives, spec trees, carry placement) traced and executed
+    on however many devices this host has."""
+    import numpy as np
+
+    from repro.models.param import init_params
+    from repro.models.small import logreg_specs
+
+    dataset = make_synthetic(1, 1, num_devices=8, seed=0)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    sel = np.stack([np.stack([(np.arange(4) + t) % 8,
+                              (np.arange(4) + t + 2) % 8])
+                    for t in range(rounds)])
+    outs = []
+    for m in (None, mesh):
+        cfg = FederatedConfig(algorithm=algo, num_devices=8,
+                              devices_per_round=4, local_epochs=1,
+                              learning_rate=0.01, mu=0.001, seed=5,
+                              engine="batched", chunk_rounds=rounds,
+                              **cfg_kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        tr.mesh = m
+        tr.engine = RoundEngine(logreg_loss, cfg, spec=tr.spec,
+                                num_devices=8, mesh=m)
+        outs.append(tr.run(params, rounds, selections=sel))
+    return outs
+
+
+@pytest.mark.parametrize("algo", ["feddane", "scaffold", "sdane",
+                                  "feddane_pipelined"])
+def test_trivial_mesh_matches_plain_program(algo):
+    import numpy as np
+    mesh = sharding.make_device_mesh(1)
+    (h0, f0), (h1, f1) = _run_pair(algo, mesh)
+    assert h0["loss"] == pytest.approx(h1["loss"], abs=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(f0),
+                    jax.tree_util.tree_leaves(f1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_trivial_mesh_matches_plain_program_env():
+    import numpy as np
+    mesh = sharding.make_device_mesh(1)
+    (h0, f0), (h1, f1) = _run_pair("feddane", mesh,
+                                   scenario="bernoulli", avail_prob=0.5)
+    assert h0["effective_k"] == h1["effective_k"]
+    for a, b in zip(jax.tree_util.tree_leaves(f0),
+                    jax.tree_util.tree_leaves(f1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_trivial_mesh_scan_driver():
+    import numpy as np
+
+    from repro.core.engine import ScannedDriver
+    from repro.models.param import init_params
+    from repro.models.small import logreg_specs
+
+    dataset = make_synthetic(1, 1, num_devices=8, seed=0)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    sel = np.tile(np.arange(4), (3, 1))
+    cfg = FederatedConfig(algorithm="scaffold", num_devices=8,
+                          devices_per_round=4, local_epochs=1,
+                          learning_rate=0.01, seed=5, engine="batched",
+                          round_driver="scan", chunk_rounds=3)
+    finals = []
+    for m in (None, sharding.make_device_mesh(1)):
+        eng = RoundEngine(logreg_loss, cfg, num_devices=8, mesh=m)
+        drv = ScannedDriver(logreg_loss, dataset, cfg, engine=eng)
+        assert drv.mesh is m
+        _, final = drv.run(params, 3, selections=sel)
+        finals.append(final)
+    for a, b in zip(jax.tree_util.tree_leaves(finals[0]),
+                    jax.tree_util.tree_leaves(finals[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+# -- the 8-way parity suite (own process, forced host devices) -------------
+
+def test_sharded_parity_8way_subprocess():
+    """All registered algorithms + scenario + drivers, mesh=8 vs mesh=1,
+    atol 1e-5 — the PR's sharded-path acceptance gate."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests",
+                                      "_sharded_child.py")],
+        env=env, capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, (
+        f"sharded parity child failed\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr}")
+    assert "SHARDED-PARITY-OK" in proc.stdout, proc.stdout
