@@ -1,65 +1,234 @@
-"""Kernel microbenchmarks: fused dane_update and flash_attention
-(interpret-mode correctness + XLA-path timing on CPU; the derived column
-reports the model-size-normalized bandwidth figure used in §Perf)."""
+"""Kernel bench trajectory: fused local-solve + dane_update A/B timings.
+
+Writes ``BENCH_kernel.json`` under the versioned ``benchmarks/common``
+schema — the cross-PR kernel perf trajectory gated by
+``benchmarks/regress.py`` (CI job ``bench-smoke``).  Three entry groups:
+
+- ``kernel_update``: the masked per-step FedDANE update on stacked
+  pytrees — per-leaf launches (PR-1 path) vs the whole-pytree flat-pack
+  single launch, across model sizes, plus the jitted XLA oracle as the
+  no-launch-overhead bound.  Effective GB/s assumes the kernel's 5
+  model-sized streams (4 reads + 1 write); ``roofline_frac`` is that
+  against this machine's measured stream-triad peak (a DRAM ceiling —
+  cache-resident working sets can legitimately exceed 1.0).
+- ``local_solve``: whole local solves through ``make_batched_solver``
+  (per-step autodiff+update vs the fused whole-step / whole-epoch
+  kernels).  On CPU the fused kernels run in interpret mode and LOSE —
+  recorded honestly; they are the accelerator path (``local_solver``
+  auto-dispatch keeps CPU on flat).
+- ``attention``: chunked online-softmax vs materialized attention.
+
+Timing discipline: ``time.perf_counter``, explicit warmup iterations
+(compile + cache effects excluded), then the median of the timed
+window.  Every A/B pair carries ``speedup`` (baseline_ms / this_ms) —
+the machine-portable ratio regress.py compares across machines.
+
+Correctness: every dane_update path is asserted against the single
+pytree oracle ``repro.kernels.ref.dane_update_tree_ref`` before timing;
+the flat-vs-per-leaf acceptance invariant (flat faster at K=8) is
+asserted at the bottom of :func:`main`.
+"""
+from __future__ import annotations
+
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit
-from repro.core import pytree as pt
-from repro.kernels.ref import dane_update_ref
+from benchmarks.common import SCALE, bench_entry, emit, write_bench_json
+from repro.core.client import make_batched_solver
+from repro.kernels import ops
+from repro.kernels.ref import dane_update_tree_ref
+from repro.models.small import logreg_loss
+
+K = 8
+ETA, MU = 0.01, 0.1
+
+#: (name, leaf shapes) for the stacked-update A/B — multi-leaf trees,
+#: the case the flat pack exists for (per-leaf pays O(leaves) launches).
+UPDATE_SIZES = [
+    ("mlp150k", [(300, 256), (256,), (256, 256), (256,), (256, 10),
+                 (10,)]),
+    ("mlp1m", [(300, 1024), (1024,), (1024, 768), (768,), (768, 10),
+               (10,)]),
+]
+
+#: (name, d, C) logistic-regression sizes for the fused-solve A/B.
+SOLVE_SIZES = [("logreg610", 60, 10), ("logreg50k", 784, 64)]
 
 
-def bench(fn, *args, iters=20):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
+def bench(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    """Median wall seconds per call: explicit warmup (compile + caches),
+    then ``iters`` timed calls via ``time.perf_counter``."""
+    iters = max(3, int(iters * SCALE))
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
 
 
-def main():
+def stream_triad_peak_gbps() -> float:
+    """Measured machine bandwidth ceiling: jitted ``a = b + s*c`` triad
+    (2 reads + 1 write) on a 32M-element f32 array."""
+    n = 1 << 25
     key = jax.random.PRNGKey(0)
-    # --- dane_update: XLA-fused reference path (kernel itself is validated
-    # in interpret mode by tests; on CPU we time the jnp oracle which XLA
-    # fuses — the bandwidth number transfers to the TPU roofline model)
-    n = 4_000_000
-    ks = jax.random.split(key, 4)
-    w, g, c, a = [jax.random.normal(k, (n,), jnp.float32) for k in ks]
-    f = jax.jit(lambda *t: dane_update_ref(*t, eta=1e-3, mu=0.01))
-    dt = bench(f, w, g, c, a)
-    gbps = 5 * n * 4 / dt / 1e9  # 4 reads + 1 write, f32
-    emit("kernel_dane_update_fused_4M", dt, f"{gbps:.1f}GB/s_effective")
+    b = jax.random.normal(key, (n,), jnp.float32)
+    c = jax.random.normal(key, (n,), jnp.float32)
+    triad = jax.jit(lambda b, c: b + 0.5 * c)
+    dt = bench(triad, b, c, iters=10)
+    return 3 * n * 4 / dt / 1e9
 
-    # unfused pytree expression (what the naive implementation costs)
-    def unfused(w, g, c, a):
-        dane = pt.add(pt.add(g, c), pt.scale(pt.sub(w, a), 0.01))
-        return pt.sub(w, pt.scale(dane, 1e-3))
-    f2 = jax.jit(unfused)
-    dt2 = bench(f2, w, g, c, a)
-    emit("kernel_dane_update_unfused_4M", dt2,
-         f"fused_speedup={dt2 / dt:.2f}x")
 
-    # --- flash attention (XLA online-softmax path vs materialized ref)
-    B, S, H, hd = 1, 1024, 8, 64
-    q = jax.random.normal(ks[0], (B, S, H, hd))
-    k = jax.random.normal(ks[1], (B, S, H, hd))
-    v = jax.random.normal(ks[2], (B, S, H, hd))
+def _mktree(shapes, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(rng.normal(size=(k,) + s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def _update_entries(peak_gbps):
+    """kernel_update group: per-leaf vs flat vs XLA oracle per size."""
+    valid = jnp.asarray([1.0] * (K - 2) + [0.0, 1.0], jnp.float32)
+    entries = []
+    for size_name, shapes in UPDATE_SIZES:
+        w, g, c, a = (_mktree(shapes, K, s) for s in range(4))
+        n = sum(int(np.prod(s)) for s in shapes) * K
+        gb = 5 * n * 4 / 1e9
+
+        per_leaf = jax.jit(lambda w, g, c, a: ops.dane_update_masked(
+            w, g, c, a, ETA, MU, valid))
+        flat = jax.jit(lambda w, g, c, a: ops.dane_update_tree_masked(
+            w, g, c, a, ETA, MU, valid))
+        oracle = jax.jit(lambda w, g, c, a: dane_update_tree_ref(
+            w, g, c, a, eta=ETA, mu=MU, valid=valid))
+
+        # parity vs THE oracle before timing anything
+        want = oracle(w, g, c, a)
+        for f in (per_leaf, flat):
+            got = f(w, g, c, a)
+            for leaf in w:
+                np.testing.assert_allclose(
+                    np.asarray(got[leaf]), np.asarray(want[leaf]),
+                    rtol=1e-5, atol=1e-6)
+
+        t_pl = bench(per_leaf, w, g, c, a, iters=5)
+        t_fl = bench(flat, w, g, c, a, iters=5)
+        t_or = bench(oracle, w, g, c, a, iters=5)
+        for path, t, extra in [
+                ("per_leaf", t_pl, {}),
+                ("flat", t_fl, {"speedup": round(t_pl / t_fl, 3),
+                                "baseline": "per_leaf"}),
+                ("xla_oracle", t_or, {"speedup": round(t_pl / t_or, 3),
+                                      "baseline": "per_leaf"})]:
+            gbps = gb / t
+            entries.append(bench_entry(
+                f"dane_update_{path}_{size_name}_k{K}",
+                mode="kernel_update", driver=path, k=K,
+                ms_per_round=t * 1e3, model_params=n // K,
+                gbps=round(gbps, 3),
+                roofline_frac=round(gbps / peak_gbps, 4), **extra))
+            emit(f"dane_update_{path}_{size_name}", t,
+                 f"{gbps:.2f}GB/s")
+    return entries
+
+
+def _solve_entries():
+    """local_solve group: whole E-epoch solves per solver mode."""
+    E, nb, B = 5, 4, 10
+    rng = np.random.default_rng(0)
+    entries = []
+    for size_name, d, C in SOLVE_SIZES:
+        w0 = {"w": jnp.asarray(rng.normal(size=(d, C)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(C,)), jnp.float32)}
+        corr = {"w": jnp.zeros((K, d, C)), "b": jnp.zeros((K, C))}
+        batches = {
+            "x": jnp.asarray(rng.normal(size=(K, nb, B, d)), jnp.float32),
+            "y": jnp.asarray(rng.integers(0, C, size=(K, nb, B)),
+                             jnp.int32)}
+        valid = jnp.ones((K, nb), jnp.float32)
+        times = {}
+        for mode in ("per_leaf", "flat", "fused_step", "fused_epoch"):
+            solve = make_batched_solver(
+                logreg_loss, learning_rate=0.05, num_epochs=E,
+                solver=mode)
+            f = jax.jit(lambda w0, c, b, v, _s=solve:
+                        _s(w0, c, MU, b, v).params)
+            times[mode] = bench(f, w0, corr, batches, valid, iters=5)
+        base = times["per_leaf"]
+        for mode, t in times.items():
+            extra = {} if mode == "per_leaf" else {
+                "speedup": round(base / t, 3), "baseline": "per_leaf"}
+            entries.append(bench_entry(
+                f"local_solve_{mode}_{size_name}_k{K}",
+                mode="local_solve", driver=mode, k=K,
+                ms_per_round=t * 1e3, model_params=d * C + C,
+                us_per_step=round(t / (E * nb) * 1e6, 1), **extra))
+            emit(f"local_solve_{mode}_{size_name}", t,
+                 f"{t / (E * nb) * 1e6:.0f}us/step")
+    return entries
+
+
+def _attention_entries():
+    """attention group: chunked online-softmax vs materialized."""
     from repro.models.attention import chunked_attention, full_attention
+    B, S, H, hd = 1, 1024, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks)
     fc = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
                                                    kv_chunk=256))
     ff = jax.jit(lambda q, k, v: full_attention(q, k, v, causal=True))
+    err = float(jnp.max(jnp.abs(fc(q, k, v) - ff(q, k, v))))
+    assert err < 2e-5, f"attention paths diverged: {err}"
     dtc = bench(fc, q, k, v, iters=5)
     dtf = bench(ff, q, k, v, iters=5)
     flops = 4 * B * H * S * S * hd
+    entries = [
+        bench_entry(f"attn_chunked_s{S}", mode="attention",
+                    driver="chunked", k=1, ms_per_round=dtc * 1e3,
+                    gflops=round(flops / dtc / 1e9, 2),
+                    speedup=round(dtf / dtc, 3), baseline="full"),
+        bench_entry(f"attn_full_s{S}", mode="attention", driver="full",
+                    k=1, ms_per_round=dtf * 1e3,
+                    gflops=round(flops / dtf / 1e9, 2)),
+    ]
     emit("attn_chunked_1k", dtc, f"{flops / dtc / 1e9:.1f}GFLOP/s")
     emit("attn_full_1k", dtf, f"chunked_vs_full={dtf / dtc:.2f}x")
-    err = float(jnp.max(jnp.abs(fc(q, k, v) - ff(q, k, v))))
-    emit("attn_paths_allclose", 0.0, f"max_err={err:.2e}")
+    return entries
+
+
+def main(out: str | None = "BENCH_kernel.json"):
+    peak = stream_triad_peak_gbps()
+    emit("stream_triad_peak", 0.0, f"{peak:.1f}GB/s")
+    entries = [bench_entry("stream_triad_peak", mode="machine",
+                           driver="xla", k=1, ms_per_round=0.0,
+                           gbps=round(peak, 1))]
+    entries += _update_entries(peak)
+    entries += _solve_entries()
+    entries += _attention_entries()
+
+    # acceptance invariant: ONE flat launch beats per-leaf launches on
+    # ms/step at K=8 for every multi-leaf update size on this machine
+    by_name = {e["name"]: e for e in entries}
+    for size_name, _ in UPDATE_SIZES:
+        flat = by_name[f"dane_update_flat_{size_name}_k{K}"]
+        pl = by_name[f"dane_update_per_leaf_{size_name}_k{K}"]
+        assert flat["ms_per_round"] < pl["ms_per_round"], (
+            f"flat-pack regressed below per-leaf at {size_name}: "
+            f"{flat['ms_per_round']}ms vs {pl['ms_per_round']}ms")
+
+    if out:
+        write_bench_json(out, entries)
+    return entries
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default="BENCH_kernel.json",
+                   help="bench-JSON output path ('' to skip writing)")
+    args = p.parse_args()
+    main(args.out or None)

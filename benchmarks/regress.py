@@ -1,0 +1,101 @@
+"""Bench-trajectory regression gate.
+
+Compares a freshly produced bench JSON (``benchmarks/common`` schema)
+against the committed trajectory and exits nonzero when an entry
+regressed beyond tolerance.  Two comparison modes:
+
+- default (portable): compares the ``speedup`` ratios A/B entries carry
+  (e.g. flat-vs-per-leaf, fused-vs-unfused).  Ratios divide out the
+  machine, so a committed trajectory from one container remains a
+  meaningful gate on another; tolerance defaults to 15% (CI passes a
+  wider ``--tol`` for cross-machine headroom).
+- ``--absolute``: additionally compares raw ``ms_per_round`` per entry.
+  Only meaningful on the same machine that produced the baseline
+  (update-a-baseline recipe in docs/cookbook.md).
+
+Exit status: 0 = no regression, 1 = regression(s) found, 2 = usage /
+schema problems (missing baseline, version mismatch).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import BENCH_SCHEMA_VERSION
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"regress: cannot read {path}: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    if doc.get("schema") != BENCH_SCHEMA_VERSION:
+        print(f"regress: {path} has schema {doc.get('schema')!r}, "
+              f"expected {BENCH_SCHEMA_VERSION}", file=sys.stderr)
+        raise SystemExit(2)
+    return doc
+
+
+def compare(baseline: dict, current: dict, *, tol: float,
+            absolute: bool) -> list[str]:
+    """Regression messages (empty = green)."""
+    base = {e["name"]: e for e in baseline["entries"]}
+    cur = {e["name"]: e for e in current["entries"]}
+    problems = []
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        problems.append(f"entries dropped from bench: {missing}")
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            continue
+        if "speedup" in b and "speedup" in c:
+            # ratio gate: current speedup may not fall more than tol
+            # below the committed one
+            floor = b["speedup"] * (1.0 - tol)
+            if c["speedup"] < floor:
+                problems.append(
+                    f"{name}: speedup {c['speedup']:.3f} < committed "
+                    f"{b['speedup']:.3f} - {tol:.0%} tolerance")
+        if absolute and b.get("ms_per_round") and c.get("ms_per_round"):
+            ceil = b["ms_per_round"] * (1.0 + tol)
+            if c["ms_per_round"] > ceil:
+                problems.append(
+                    f"{name}: {c['ms_per_round']:.3f}ms > committed "
+                    f"{b['ms_per_round']:.3f}ms + {tol:.0%} tolerance")
+    return problems
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("current", nargs="?", default="BENCH_kernel.json",
+                   help="freshly produced bench JSON")
+    p.add_argument("--baseline", default="benchmarks/BENCH_kernel.json",
+                   help="committed trajectory to gate against")
+    p.add_argument("--tol", type=float, default=0.15,
+                   help="allowed fractional regression (default 0.15)")
+    p.add_argument("--absolute", action="store_true",
+                   help="also gate raw ms_per_round (same-machine only)")
+    args = p.parse_args(argv)
+
+    baseline = load(args.baseline)
+    current = load(args.current)
+    problems = compare(baseline, current, tol=args.tol,
+                       absolute=args.absolute)
+    if problems:
+        print(f"regress: {len(problems)} regression(s) vs "
+              f"{args.baseline}:", file=sys.stderr)
+        for msg in problems:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    n = len(baseline["entries"])
+    print(f"regress: OK — {n} baseline entries within "
+          f"{args.tol:.0%} ({'absolute+ratio' if args.absolute else 'ratio'} mode)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

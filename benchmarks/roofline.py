@@ -40,7 +40,18 @@ def load(dirname="experiments/dryrun"):
 
 
 def main(dirname="experiments/dryrun", markdown=False):
+    if not os.path.isdir(dirname):
+        print(f"roofline: no dry-run directory at {dirname!r} — run "
+              f"`python -m benchmarks.run` (without --smoke) first to "
+              f"produce the per-(arch x shape x mesh) JSON records",
+              file=sys.stderr)
+        raise SystemExit(2)
     rows = load(dirname)
+    if not rows:
+        print(f"roofline: {dirname!r} exists but holds no *.json "
+              f"records — nothing to aggregate (was the dry-run "
+              f"interrupted?)", file=sys.stderr)
+        raise SystemExit(2)
     if markdown:
         print("| " + " | ".join(HDR) + " |")
         print("|" + "---|" * len(HDR))

@@ -206,6 +206,18 @@ class FederatedConfig:
     #              explicit engine="loop" keeps the host loop unless
     #              "scan" is also explicit
     round_driver: str = "auto"
+    # batched local-solve kernel path (core/client.py SOLVER_MODES):
+    #   "flat"     — whole-pytree flat-pack masked Pallas update, ONE
+    #                launch per step for all leaves × all K devices;
+    #                bit-identical to "per_leaf" (golden-safe default)
+    #   "per_leaf" — one launch per leaf (PR-1 path, A/B baseline)
+    #   "fused_step"/"fused_epoch" — model-specific whole-step /
+    #                whole-epoch kernels via the SolverSpec registry
+    #                (atol 1e-5 vs the looped reference, opt-in)
+    #   "auto"     — fused on accelerators when a registered spec
+    #                accepts the workload; flat otherwise (CPU: always
+    #                flat)
+    local_solver: str = "auto"
     # rounds fused per scanned-driver dispatch; checkpoints / verbose
     # printing happen at chunk boundaries (0 -> one chunk per run)
     chunk_rounds: int = 32
@@ -263,6 +275,13 @@ class FederatedConfig:
             raise ValueError(
                 f"partial_min_work must be in (0, 1], got "
                 f"{self.partial_min_work}")
+        if self.local_solver not in (
+                "auto", "flat", "per_leaf", "fused_step", "fused_epoch"):
+            # mirror of core.client.SOLVER_MODES (configs is a leaf
+            # layer; client imports configs via the engine)
+            raise ValueError(
+                f"local_solver must be one of auto/flat/per_leaf/"
+                f"fused_step/fused_epoch, got {self.local_solver!r}")
         # mesh_devices: shape-of-value check only — the device-count
         # bound is runtime state, validated by core.sharding at
         # trainer/engine build

@@ -11,10 +11,31 @@ FedDANE/SCAFFOLD all share one compiled executable.
 variants used by the batched round engine (core/engine.py): all K selected
 devices advance in lockstep through a single scan whose per-step gradient
 is ``jax.vmap``-ed over the leading device axis and whose SGD update runs
-through the fused ``dane_update`` Pallas kernel (one launch per parameter
-leaf for all K devices).  ``make_local_solver`` deliberately keeps the
-plain 4-op pytree update so the looped path stays an *independent*
-numerical reference for the kernel path.
+through a fused Pallas kernel.  ``make_local_solver`` deliberately keeps
+the plain 4-op pytree update so the looped path stays an *independent*
+numerical reference for every kernel path.
+
+Solver modes (``make_batched_solver(..., solver=...)``, threaded from
+``FederatedConfig.local_solver``):
+
+- ``"flat"`` — whole-pytree flat-pack update (``kernels.flatpack`` +
+  ``ops.dane_update_flat_masked``): ONE launch per step for all leaves ×
+  all K devices, the valid/cutoff mask folded into the kernel as a
+  per-row mask column.  Bit-identical to ``"per_leaf"`` (same per-element
+  f32 arithmetic, packing is pure layout), so it is the default
+  everywhere — including the golden-pinned paths.
+- ``"per_leaf"`` — the PR-1 one-launch-per-leaf ``dane_update_masked``
+  path, kept as the kernel-level A/B baseline (benchmarks/kernelbench).
+- ``"fused_step"`` / ``"fused_epoch"`` — model-specific whole-step /
+  whole-epoch kernels (``kernels.local_solve``) selected through the
+  :class:`SolverSpec` registry; gradient arithmetic is the kernel's own
+  (analytic residual, MXU dots), so parity with the looped reference is
+  atol 1e-5, not bitwise — these never engage implicitly on
+  golden-pinned configs.
+- ``"auto"`` — fused kernels on accelerator backends when the loss has
+  a registered spec whose shape gate accepts the workload, else flat;
+  on CPU always flat (interpret-mode fused matmuls serialize in the
+  Python grid loop — measured in benchmarks/kernelbench.py).
 
 Device data arrives as fixed-shape padded batch stacks
 ``(num_batches, batch_size, ...)`` with a per-example weight mask, produced
@@ -25,12 +46,64 @@ keeps exact parity with running the scalar solver per device.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pytree as pt
+
+#: Valid ``make_batched_solver`` modes / ``FederatedConfig.local_solver``
+#: values (module docstring documents each).
+SOLVER_MODES = ("auto", "flat", "per_leaf", "fused_step", "fused_epoch")
+
+
+class SolverSpec(NamedTuple):
+    """Declarative fused-solver registration (AlgorithmSpec-style).
+
+    Registered per ``loss_fn`` (``register_local_solver``); the batched
+    solver consults the registry to dispatch whole-step / whole-epoch
+    Pallas kernels for model families that have them.
+
+    - ``select(w0, batches, num_epochs)``: trace-time shape gate;
+      returns ``"fused_epoch"``, ``"fused_step"`` or ``None`` (fall
+      back to the generic flat path).
+    - ``make_step(eta, interpret)``: builds
+      ``step(w, batch, corr, w0, mu, mask) -> w`` over K-stacked trees.
+    - ``make_epoch(eta, num_epochs, interpret)``: builds
+      ``solve(w0, corr, mu, batches, step_mask) -> w`` running the whole
+      E-epoch scan in-kernel (``step_mask``: (K, E*nb) per-step keep
+      mask in scan order).
+    """
+
+    name: str
+    summary: str
+    select: Callable[[Any, Any, int], Optional[str]]
+    make_step: Callable
+    make_epoch: Optional[Callable]
+
+
+_SOLVERS: dict = {}
+
+
+def register_local_solver(loss_fn: Callable, spec: SolverSpec) -> None:
+    """Register ``spec`` as the fused solver for ``loss_fn`` (keyed by
+    function identity; wrapped/partial losses fall back to flat)."""
+    _SOLVERS[loss_fn] = spec
+
+
+def local_solver_spec(loss_fn: Callable) -> Optional[SolverSpec]:
+    """The registered :class:`SolverSpec` for ``loss_fn``, or None."""
+    _ensure_builtin_solvers()
+    return _SOLVERS.get(loss_fn)
+
+
+def _ensure_builtin_solvers() -> None:
+    # lazy, idempotent: kernels/local_solve registers the paper-model
+    # specs on first use (mirrors strategies' builtin registration)
+    if not _SOLVERS:
+        from repro.kernels import local_solve
+        local_solve.register()
 
 
 class LocalResult(NamedTuple):
@@ -109,9 +182,57 @@ def _batch_weight(batch) -> jnp.ndarray:
     return jnp.float32(1.0)
 
 
+def _resolve_solver_mode(solver: str, loss_fn: Callable, w0, batches,
+                         num_epochs: int) -> str:
+    """Trace-time dispatch of the requested solver mode (see module
+    docstring).  Explicit fused requests validate against the registry
+    and shape gate with a clear error; ``"auto"`` falls back silently.
+    """
+    if solver not in SOLVER_MODES:
+        raise ValueError(
+            f"unknown solver mode {solver!r}; pick one of {SOLVER_MODES}")
+    if solver in ("flat", "per_leaf"):
+        return solver
+    spec = local_solver_spec(loss_fn)
+    w0_sample = w0
+    picked = spec.select(w0_sample, batches, num_epochs) if spec else None
+    if solver == "auto":
+        if spec is None or picked is None or \
+                jax.default_backend() == "cpu":
+            return "flat"
+        return picked
+    # explicit fused_step / fused_epoch
+    if spec is None:
+        raise ValueError(
+            f"solver={solver!r} but no SolverSpec is registered for "
+            f"{getattr(loss_fn, '__name__', loss_fn)!r} "
+            f"(register_local_solver)")
+    if picked is None:
+        raise ValueError(
+            f"solver={solver!r}: registered spec {spec.name!r} rejects "
+            f"this workload's shapes; use solver='flat'")
+    if solver == "fused_epoch" and spec.make_epoch is None:
+        raise ValueError(
+            f"spec {spec.name!r} has no whole-epoch kernel; "
+            f"use solver='fused_step'")
+    return solver
+
+
+def _epoch_step_mask(valid, num_epochs: int, steps_limit):
+    """Per-step keep mask (K, E*nb) in scan order (epochs outer,
+    batches inner) — the closed form of the generic solver's running
+    ``done < steps_limit`` predicate, so whole-epoch kernels replay the
+    exact masked trajectory."""
+    v_steps = jnp.tile(valid, (1, num_epochs))          # (K, E*nb)
+    if steps_limit is None:
+        return v_steps
+    done_before = jnp.cumsum(v_steps, axis=1) - v_steps
+    return v_steps * (done_before < steps_limit[:, None])
+
+
 def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
-                        num_epochs: int,
-                        with_cutoff: bool = False) -> Callable:
+                        num_epochs: int, with_cutoff: bool = False,
+                        solver: str = "auto") -> Callable:
     """Device-parallel E-epoch SGD solver for DANE-type subproblems.
 
     ``solve(w0, corr, mu, batches, valid) -> LocalResult`` where
@@ -126,10 +247,14 @@ def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
                    stacked maximum follow exactly the trajectory the
                    scalar solver would give them.
 
-    All K devices run in lockstep: the per-batch gradient is vmapped over
-    the device axis and the update is the fused ``dane_update`` kernel
-    applied to the device-stacked leaves (interpret on CPU, Mosaic on
-    TPU).  Returned leaves keep the leading K axis.
+    All K devices run in lockstep.  ``solver`` picks the kernel path
+    (module docstring): the default flat-pack mode packs the whole
+    parameter pytree into one ``(K*rows, LANES)`` buffer — corr and the
+    anchor packed ONCE outside the scan — and issues ONE masked Pallas
+    launch per step (interpret on CPU, Mosaic on TPU); fused modes
+    replace the vmapped-autodiff + update pair with a single
+    model-specific kernel per step (or per whole epoch).  Returned
+    leaves keep the leading K axis.
 
     ``with_cutoff=True`` builds the scenario-layer variant
     ``solve(w0, corr, mu, batches, valid, steps_limit)`` with a traced
@@ -140,6 +265,7 @@ def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
     truncated trajectory the scalar cutoff solver produces, padding
     batches notwithstanding.
     """
+    from repro.kernels import flatpack
     from repro.kernels import ops as kops
 
     grad_fn = jax.vmap(jax.grad(loss_fn))
@@ -147,19 +273,52 @@ def make_batched_solver(loss_fn: Callable, *, learning_rate: float,
     def solve_body(w0, corr, mu, batches, valid,
                    steps_limit=None) -> LocalResult:
         K = valid.shape[0]
+        mode = _resolve_solver_mode(solver, loss_fn, w0, batches,
+                                    num_epochs)
         anchor = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (K,) + x.shape), w0)
+
+        if mode == "fused_epoch":
+            spec = local_solver_spec(loss_fn)
+            solve_fn = spec.make_epoch(learning_rate, num_epochs,
+                                       kops._on_cpu())
+            mask = _epoch_step_mask(valid, num_epochs, steps_limit)
+            w = solve_fn(w0, corr, mu, batches, mask)
+            done = num_epochs * valid.sum(axis=1)
+            taken = (jnp.minimum(done, steps_limit)
+                     if steps_limit is not None else done)
+            return LocalResult(w, pt.sub(w, anchor),
+                               taken.astype(jnp.int32))
+
+        if mode == "fused_step":
+            spec = local_solver_spec(loss_fn)
+            step_fn = spec.make_step(learning_rate, kops._on_cpu())
+        elif mode == "flat":
+            fspec = flatpack.flat_spec(w0)
+            corr_f = flatpack.pack_stacked(fspec, corr, K)
+            anchor_f = flatpack.pack_broadcast(fspec, w0, K)
 
         def batch_step(carry, xs):
             w, done = carry
             batch, v = xs                       # leaves (K, b, ...), (K,)
-            g = grad_fn(w, batch)
             if steps_limit is not None:
                 m = v * (done < steps_limit)    # cap counts valid steps
             else:
                 m = v
-            w = kops.dane_update_masked(
-                w, g, corr, anchor, learning_rate, mu, m)
+            if mode == "fused_step":
+                w = step_fn(w, batch, corr, w0, mu, m)
+            elif mode == "flat":
+                g = grad_fn(w, batch)
+                wf = flatpack.pack_stacked(fspec, w, K)
+                gf = flatpack.pack_stacked(fspec, g, K)
+                wf = kops.dane_update_flat_masked(
+                    wf, gf, corr_f, anchor_f, learning_rate, mu, m,
+                    fspec.rows)
+                w = flatpack.unpack_stacked(fspec, wf, K)
+            else:                               # per_leaf
+                g = grad_fn(w, batch)
+                w = kops.dane_update_masked(
+                    w, g, corr, anchor, learning_rate, mu, m)
             return (w, done + v), None
 
         # scan wants the scanned axis leading: (nb, K, batch, ...)

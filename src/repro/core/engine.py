@@ -196,10 +196,11 @@ class RoundEngine:
             else mesh
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
-            num_epochs=cfg.local_epochs)
+            num_epochs=cfg.local_epochs, solver=cfg.local_solver)
         self._solver_env = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
-            num_epochs=cfg.local_epochs, with_cutoff=True)
+            num_epochs=cfg.local_epochs, with_cutoff=True,
+            solver=cfg.local_solver)
         self._grads = make_batched_grad_fn(loss_fn)
         self._server_opt = make_server_opt(self.spec, cfg)
         self.round_body = self._make_round_body()

@@ -1,16 +1,29 @@
-"""Pallas TPU kernels for the two hot spots FedDANE training exposes:
+"""Pallas TPU kernels for the hot spots FedDANE training exposes:
 
 - ``dane_update``: the fused FedDANE local step (Alg. 2 line 7 SGD step)
   — 4 model-sized operand streams, strictly HBM-bandwidth-bound at
   235B/480B scale; fusing saves 3 of 4 extra full-model passes.
+- ``flatpack`` + ``dane_update_tree_masked``: the whole parameter pytree
+  flat-packed into ONE ``(K*rows, LANES)`` buffer so the masked update
+  is ONE launch per step for all leaves × all K devices (the batched
+  solver's default path; bit-identical to per-leaf).
+- ``local_solve``: model-specific whole-step / whole-epoch fused solvers
+  (softmax-regression family), dispatched via the ``SolverSpec``
+  registry in ``core/client.py``.
 - ``flash_attention``: blockwise online-softmax attention, VMEM-tiled,
-  MXU-aligned (the generic compute hot spot of every assigned arch).
+  MXU-aligned, GQA via query-group folding (no repeated K/V).
 
 Validated in interpret mode against the pure-jnp oracles in ref.py
 (tests/test_kernels.py sweeps shapes/dtypes); compiled via Mosaic on TPU.
 """
-from repro.kernels.ops import dane_update, dane_update_array, flash_attention
-from repro.kernels.ref import dane_update_ref, flash_attention_ref
+from repro.kernels import flatpack, local_solve
+from repro.kernels.ops import (dane_update, dane_update_array,
+                               dane_update_flat_masked, dane_update_masked,
+                               dane_update_tree_masked, flash_attention)
+from repro.kernels.ref import (dane_update_ref, dane_update_tree_ref,
+                               flash_attention_ref)
 
-__all__ = ["dane_update", "dane_update_array", "flash_attention",
-           "dane_update_ref", "flash_attention_ref"]
+__all__ = ["dane_update", "dane_update_array", "dane_update_masked",
+           "dane_update_flat_masked", "dane_update_tree_masked",
+           "flash_attention", "dane_update_ref", "dane_update_tree_ref",
+           "flash_attention_ref", "flatpack", "local_solve"]

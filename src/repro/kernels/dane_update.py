@@ -13,6 +13,7 @@ round (mu is swept in the paper's tuning grid).
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -56,3 +57,68 @@ def dane_update_2d(w, grad, g_corr, anchor, eta, mu,
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
     )(eta, mu, w, grad, g_corr, anchor)
+
+
+def _flat_kernel(eta_ref, mu_ref, m_ref, w_ref, g_ref, c_ref, a_ref,
+                 out_ref):
+    """Masked update on one row block of the flat-packed buffer.
+
+    ``m_ref`` is the per-row keep-mask column, tiled alongside the data
+    blocks — the ``(K,)`` valid/steps_limit select folded into the
+    launch instead of the per-leaf path's post-hoc ``jnp.where`` over
+    unpacked leaves.  A lane-broadcast row mask (rather than in-kernel
+    device-id arithmetic) keeps the body a handful of VPU ops and lets
+    row blocks straddle device segments, so block size is a pure tiling
+    choice.
+    """
+    eta = eta_ref[0, 0]
+    mu = mu_ref[0, 0]
+    keep = m_ref[...] > 0.0                           # (block_rows, 1)
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    out = w - eta * (g + c + mu * (w - a))
+    out_ref[...] = jnp.where(keep, out, w).astype(out_ref.dtype)
+
+
+def dane_update_flat(w, grad, g_corr, anchor, eta, mu, mask,
+                     rows_per_dev: int,
+                     block_rows: int | None = None,
+                     interpret: bool = False):
+    """ONE masked launch over a ``(K*rows_per_dev, LANES)`` flat view.
+
+    Operands are whole-pytree flat packs (``kernels.flatpack``): all
+    leaves × all K devices in a single ``pallas_call``.  ``mask`` is
+    the ``(K,)`` per-device step mask, expanded (one cheap XLA repeat)
+    to the per-row keep column the kernel tiles with the data.
+
+    ``block_rows=None`` picks the backend's sweet spot: on TPU the
+    largest divisor of the total row count ≤ ``DEFAULT_BLOCK_ROWS``
+    (VMEM-bounded tiles); in interpret mode the whole buffer as ONE
+    block — the interpreter's cost scales with grid steps × full-array
+    traffic, so a single grid step is the fast shape on CPU.
+    """
+    total_rows = w.shape[0]
+    k = total_rows // rows_per_dev
+    if block_rows is None:
+        block_rows = total_rows if interpret else DEFAULT_BLOCK_ROWS
+    block_rows = min(block_rows, total_rows)
+    while total_rows % block_rows != 0:
+        block_rows -= 1
+    nblocks = total_rows // block_rows
+    m_rows = jnp.repeat(jnp.asarray(mask, jnp.float32), rows_per_dev) \
+        .reshape(total_rows, 1)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    mspec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+    scalar = pl.BlockSpec(memory_space=pltpu.SMEM)
+    eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _flat_kernel,
+        grid=(nblocks,),
+        in_specs=[scalar, scalar, mspec, spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(eta, mu, m_rows, w, grad, g_corr, anchor)

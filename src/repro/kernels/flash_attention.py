@@ -23,7 +23,7 @@ DEFAULT_BLOCK_K = 128
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             causal: bool, block_q: int, block_k: int, num_kv_blocks: int,
-            scale: float):
+            scale: float, causal_period: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -46,6 +46,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         if causal:
             qpos = q_start + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
+            if causal_period:
+                # GQA group-folded layout (ops.flash_attention): q row
+                # g*S + s is sequence position s, so the causal mask
+                # keys off row % S.  Masked-but-visited blocks add
+                # exactly 0 to l/acc, so this matches the repeated-KV
+                # computation bit-for-bit.
+                qpos = qpos % causal_period
             kpos = k_start + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
             mask = kpos <= qpos
@@ -71,8 +78,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_3d(q, k, v, *, causal: bool = True,
                        block_q: int = DEFAULT_BLOCK_Q,
                        block_k: int = DEFAULT_BLOCK_K,
+                       causal_period: int = 0,
                        interpret: bool = False):
-    """q: (BH, S, hd); k, v: (BH, T, hd) -> (BH, S, hd)."""
+    """q: (BH, S, hd); k, v: (BH, T, hd) -> (BH, S, hd).
+
+    ``causal_period``: when >0, a q row's causal position is
+    ``row % causal_period`` — the GQA group-folded layout where the
+    query axis packs ``group`` heads of ``causal_period`` positions
+    each.  0 (default) keeps plain row positions (exact pre-GQA code:
+    the mod is compiled out).
+    """
     BH, S, hd = q.shape
     T = k.shape[1]
     block_q = min(block_q, S)
@@ -83,7 +98,8 @@ def flash_attention_3d(q, k, v, *, causal: bool = True,
 
     kernel = functools.partial(
         _kernel, causal=causal, block_q=block_q, block_k=block_k,
-        num_kv_blocks=nk, scale=hd ** -0.5)
+        num_kv_blocks=nk, scale=hd ** -0.5,
+        causal_period=0 if causal_period == S else causal_period)
 
     return pl.pallas_call(
         kernel,

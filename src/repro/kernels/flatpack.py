@@ -1,0 +1,133 @@
+"""Flat-parameter packing: one ``(rows, LANES)`` buffer per pytree.
+
+The per-leaf kernel path (``ops.dane_update``) pays one ``pallas_call``
+per parameter leaf per step — cheap on a 2-leaf logistic regression,
+O(leaves) launch overhead on anything deeper.  This module flattens a
+whole parameter pytree into a single lane-aligned f32 buffer with a
+*static* leaf-offset table, so the fused update becomes ONE launch for
+all leaves × all K stacked devices:
+
+    layout (stacked, K devices, ``rows`` per device)::
+
+        row 0 .. rows-1      device 0:  leaf0 | leaf1 | ... | zero pad
+        row rows .. 2*rows-1 device 1:  leaf0 | leaf1 | ... | zero pad
+        ...                                   (each row = 128 lanes)
+
+Each device's segment is padded independently to a whole number of
+rows, so a row never straddles devices — the kernel can map any row
+block to its owning device with a static integer table (the SMEM
+device-id map in ``dane_update.dane_update_flat``).
+
+The packing is pure layout: every real element round-trips through f32
+exactly as the per-leaf kernel casts it, so the flat path is
+bit-identical to the per-leaf path (tests/test_kernels.py pins this).
+``FlatSpec`` is hashable static metadata — safe as a jit static arg.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dane_update import LANES
+
+#: Per-device segments are padded to a multiple of this many rows so the
+#: flat kernel always has a useful block granularity (an odd row count
+#: would otherwise force 1-row blocks).  8 rows = 1 KiB of f32 lanes —
+#: negligible waste even for the 2-leaf logistic regression.
+ROW_ALIGN = 8
+
+
+class FlatSpec(NamedTuple):
+    """Static packing layout for one (unstacked) parameter pytree."""
+
+    treedef: Any                           # pytree structure
+    shapes: Tuple[Tuple[int, ...], ...]    # per-leaf shapes
+    dtypes: Tuple[Any, ...]                # per-leaf dtypes
+    sizes: Tuple[int, ...]                 # per-leaf element counts
+    offsets: Tuple[int, ...]               # per-leaf start offsets
+    total: int                             # sum(sizes)
+    rows: int                              # ceil(total/LANES) -> ROW_ALIGN
+
+    @property
+    def padded(self) -> int:
+        """Elements per device segment after lane padding."""
+        return self.rows * LANES
+
+
+def flat_spec(tree) -> FlatSpec:
+    """Build the static layout table from an (unstacked) pytree.
+
+    Works on concrete arrays and on tracers (only shapes/dtypes are
+    read), so it can be called inside a jitted solver body.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    sizes = tuple(math.prod(s) for s in shapes)
+    offsets, off = [], 0
+    for n in sizes:
+        offsets.append(off)
+        off += n
+    rows = -(-off // LANES)
+    rows = -(-max(rows, 1) // ROW_ALIGN) * ROW_ALIGN
+    return FlatSpec(treedef, shapes, dtypes, sizes, tuple(offsets),
+                    off, rows)
+
+
+def _pad_cols(flat2d, spec: FlatSpec):
+    pad = spec.padded - spec.total
+    if pad:
+        flat2d = jnp.concatenate(
+            [flat2d, jnp.zeros((flat2d.shape[0], pad), jnp.float32)],
+            axis=1)
+    return flat2d
+
+
+def pack(spec: FlatSpec, tree) -> jnp.ndarray:
+    """Unstacked pytree -> ``(rows, LANES)`` f32 buffer."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    flat = jnp.concatenate(
+        [x.reshape(1, -1).astype(jnp.float32) for x in leaves], axis=1)
+    return _pad_cols(flat, spec).reshape(spec.rows, LANES)
+
+
+def unpack(spec: FlatSpec, buf) -> Any:
+    """``(rows, LANES)`` buffer -> unstacked pytree (leaf dtypes kept)."""
+    flat = buf.reshape(1, spec.padded)
+    leaves = [
+        flat[0, off:off + n].reshape(shape).astype(dt)
+        for off, n, shape, dt in zip(spec.offsets, spec.sizes,
+                                     spec.shapes, spec.dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def pack_stacked(spec: FlatSpec, tree, k: int) -> jnp.ndarray:
+    """K-stacked pytree (leaves ``(K, ...)``) -> ``(K*rows, LANES)``."""
+    leaves = jax.tree_util.tree_flatten(tree)[0]
+    flat = jnp.concatenate(
+        [x.reshape(k, -1).astype(jnp.float32) for x in leaves], axis=1)
+    return _pad_cols(flat, spec).reshape(k * spec.rows, LANES)
+
+
+def unpack_stacked(spec: FlatSpec, buf, k: int) -> Any:
+    """``(K*rows, LANES)`` buffer -> K-stacked pytree."""
+    flat = buf.reshape(k, spec.padded)
+    leaves = [
+        flat[:, off:off + n].reshape((k,) + shape).astype(dt)
+        for off, n, shape, dt in zip(spec.offsets, spec.sizes,
+                                     spec.shapes, spec.dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def pack_broadcast(spec: FlatSpec, tree, k: int) -> jnp.ndarray:
+    """Unstacked pytree broadcast to K devices: ``(K*rows, LANES)``.
+
+    Used for the solve anchor ``w0``, which every device shares — packs
+    once, then broadcasts rows (no per-device concat work).
+    """
+    one = pack(spec, tree)                              # (rows, LANES)
+    return jnp.broadcast_to(one[None], (k,) + one.shape) \
+        .reshape(k * spec.rows, LANES)

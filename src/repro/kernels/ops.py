@@ -11,7 +11,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dane_update import LANES, dane_update_2d
+from repro.kernels import flatpack
+from repro.kernels.dane_update import (LANES, dane_update_2d,
+                                       dane_update_flat)
 from repro.kernels.flash_attention import flash_attention_3d
 
 
@@ -78,6 +80,49 @@ def dane_update_masked(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
     return jax.tree_util.tree_map(select, new, w_tree)
 
 
+@functools.partial(jax.jit, static_argnames=("rows_per_dev", "interpret"))
+def _flat_masked_jit(wf, gf, cf, af, eta, mu, valid, rows_per_dev,
+                     interpret):
+    return dane_update_flat(wf, gf, cf, af, eta, mu, valid,
+                            rows_per_dev, interpret=interpret)
+
+
+def dane_update_flat_masked(wf, gf, cf, af, eta, mu, valid,
+                            rows_per_dev: int,
+                            interpret: bool | None = None):
+    """Masked FedDANE step on flat-packed ``(K*rows, LANES)`` buffers.
+
+    The whole-pytree analogue of :func:`dane_update_masked`: operands
+    come from ``kernels.flatpack`` packing, the launch count drops from
+    one-per-leaf to ONE, and the ``(K,)`` ``valid`` mask is resolved
+    inside the kernel via a per-row mask column (no post-hoc select).
+    Per-element arithmetic is identical to the per-leaf kernel, so the
+    two paths agree bitwise (tests/test_kernels.py pins this).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    return _flat_masked_jit(wf, gf, cf, af, eta, mu, valid, rows_per_dev,
+                            interpret)
+
+
+def dane_update_tree_masked(w_tree, grad_tree, corr_tree, anchor_tree,
+                            eta, mu, valid,
+                            interpret: bool | None = None):
+    """Flat-packed masked step with pytree in/out: pack -> ONE kernel
+    launch -> unpack.  Drop-in replacement for :func:`dane_update_masked`
+    used by the batched solver's default ``"flat"`` mode."""
+    spec = flatpack.flat_spec(
+        jax.tree_util.tree_map(lambda x: x[0], w_tree))
+    k = jax.tree_util.tree_leaves(w_tree)[0].shape[0]
+    wf = flatpack.pack_stacked(spec, w_tree, k)
+    gf = flatpack.pack_stacked(spec, grad_tree, k)
+    cf = flatpack.pack_stacked(spec, corr_tree, k)
+    af = flatpack.pack_stacked(spec, anchor_tree, k)
+    out = dane_update_flat_masked(wf, gf, cf, af, eta, mu, valid,
+                                  spec.rows, interpret=interpret)
+    return flatpack.unpack_stacked(spec, out, k)
+
+
 # ---------------------------------------------------------------------------
 # flash attention with GQA layout handling
 # ---------------------------------------------------------------------------
@@ -85,14 +130,25 @@ def dane_update_masked(w_tree, grad_tree, corr_tree, anchor_tree, eta, mu,
 @functools.partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     interpret: bool = True):
-    """q: (B, S, H, hd); k, v: (B, T, Kv, hd) -> (B, S, H, hd)."""
+    """q: (B, S, H, hd); k, v: (B, T, Kv, hd) -> (B, S, H, hd).
+
+    GQA (Kv < H) never materializes repeated K/V: the ``group = H/Kv``
+    query heads sharing one KV head are folded into that head's query
+    *rows* inside the ``to3`` reshape — ``(B*Kv, group*S, hd)`` queries
+    against ``(B*Kv, T, hd)`` KV — and the kernel recovers each row's
+    true sequence position as ``row % S`` (``causal_period``).  Row-wise
+    online softmax makes this exactly the repeated-KV computation
+    without the ``group``-fold K/V traffic and memory.
+    """
     B, S, H, hd = q.shape
     T, Kv = k.shape[1], k.shape[2]
     group = H // Kv
-    if group > 1:
-        k = jnp.repeat(k, group, axis=2)
-        v = jnp.repeat(v, group, axis=2)
-    to3 = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
-    o = flash_attention_3d(to3(q), to3(k), to3(v), causal=causal,
-                           interpret=interpret)
-    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    to3 = lambda a: a.transpose(0, 2, 1, 3).reshape(
+        B * a.shape[2], -1, hd)
+    # head h = kv * group + g shares KV head kv (jnp.repeat ordering)
+    q3 = q.reshape(B, S, Kv, group, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * Kv, group * S, hd)
+    o = flash_attention_3d(q3, to3(k), to3(v), causal=causal,
+                           causal_period=S, interpret=interpret)
+    return o.reshape(B, Kv, group, S, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, S, H, hd)

@@ -21,6 +21,28 @@ def dane_update_ref(w, grad, g_corr, anchor, *, eta: float, mu: float):
     return out.astype(w.dtype)
 
 
+def dane_update_tree_ref(w_tree, grad_tree, corr_tree, anchor_tree, *,
+                         eta: float, mu: float, valid=None):
+    """Pytree oracle for every dane_update kernel path (per-leaf, flat-
+    packed, fused) — THE single ground truth shared by the kernel tests
+    and benchmarks/kernelbench.py parity asserts.
+
+    ``valid`` (optional, (K,) over the leading device axis of stacked
+    trees): devices with ``valid == 0`` take an identity step.
+    """
+    new = jax.tree_util.tree_map(
+        lambda w, g, c, a: dane_update_ref(w, g, c, a, eta=eta, mu=mu),
+        w_tree, grad_tree, corr_tree, anchor_tree)
+    if valid is None:
+        return new
+
+    def select(n, o):
+        keep = valid.reshape(valid.shape + (1,) * (n.ndim - 1)) > 0
+        return jnp.where(keep, n, o)
+
+    return jax.tree_util.tree_map(select, new, w_tree)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """Materialized-scores attention.  q,k,v: (B, H, S|T, hd)."""
     B, H, S, hd = q.shape

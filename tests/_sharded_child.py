@@ -87,6 +87,14 @@ def main() -> None:
     assert leaves_maxdiff(f8, fa) == 0.0, "auto mesh != explicit 8"
     print("ok auto == 8")
 
+    # the fused whole-epoch local solver under the mesh: the Pallas
+    # epoch kernel runs inside shard_map (K/mesh devices per shard)
+    _, f1 = run("feddane", 1, local_solver="fused_epoch")
+    _, f8 = run("feddane", 8, local_solver="fused_epoch")
+    dmax = leaves_maxdiff(f1, f8)
+    assert dmax < ATOL, f"fused_epoch sharded diverged ({dmax:.2e})"
+    print(f"ok fused_epoch mesh: params {dmax:.2e}")
+
     # non-ideal scenario: masked psum aggregation + telemetry.  With
     # injected selections, the host driver's env uniforms are the only
     # rng consumption, so both mesh settings realize identical

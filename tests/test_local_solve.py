@@ -1,0 +1,237 @@
+"""Solver-mode dispatch and fused local-solve parity (core/client.py).
+
+Three contracts on ``make_batched_solver(..., solver=...)``:
+
+1. **flat is a pure layout change**: the default flat-pack mode must be
+   *bitwise* identical to the per-leaf kernel path — params AND step
+   counts, with and without the scenario cutoff — so swapping the
+   default could not move any golden-pinned trajectory.
+2. **fused kernels are numerically honest**: the whole-step and
+   whole-epoch Pallas kernels (analytic softmax gradient, not autodiff)
+   must match the per-device looped reference solver at atol 1e-5,
+   including masked padding batches and cutoff step limits.
+3. **dispatch is loud**: unknown modes and fused requests the registry
+   cannot serve raise immediately with actionable messages; ``"auto"``
+   falls back to flat on CPU (this container) without error.
+
+Plus the engine-level version of (2): every registered algorithm, run
+batched with ``local_solver="fused_epoch"``, must track the looped
+reference engine at the same atol 1e-5 the generic batched path pins in
+tests/test_engine.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import leaves_allclose as _leaves_allclose
+
+from repro.configs.base import FederatedConfig
+from repro.core import (FederatedTrainer, make_batched_solver,
+                        make_local_solver)
+from repro.core.client import (SOLVER_MODES, _epoch_step_mask,
+                               _resolve_solver_mode, local_solver_spec)
+from repro.data import make_synthetic
+from repro.data.batching import stack_device_batches
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
+         "feddane_pipelined", "feddane_decayed", "scaffold",
+         "fedavgm", "sdane"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=8, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return ds, params
+
+
+@pytest.fixture(scope="module")
+def stacked(setup):
+    """Heterogeneous 3-device selection: padding/masking is exercised."""
+    ds, params = setup
+    S = np.array([0, 3, 5])
+    batches, valid = stack_device_batches(ds, S)
+    rng = jax.random.PRNGKey(1)
+    corr = jax.tree_util.tree_map(
+        lambda x: 0.01 * jax.random.normal(rng, (len(S),) + x.shape,
+                                           x.dtype), params)
+    return params, corr, batches, valid, S
+
+
+# ---------------------------------------------------------------------------
+# registry + dispatch
+# ---------------------------------------------------------------------------
+
+def test_registry_serves_logreg(stacked):
+    params, _, batches, _, _ = stacked
+    spec = local_solver_spec(logreg_loss)
+    assert spec is not None and spec.name == "linear_logistic"
+    # small grids take the whole-epoch kernel, huge ones the step kernel
+    assert spec.select(params, batches, 3) == "fused_epoch"
+    assert spec.select(params, batches, 10_000) == "fused_step"
+    # non-logreg shapes are rejected (-> generic flat fallback)
+    assert spec.select({"w": params["w"]}, batches, 3) is None
+
+
+def test_resolve_mode_unknown_and_passthrough(stacked):
+    params, _, batches, _, _ = stacked
+    with pytest.raises(ValueError, match="unknown solver mode"):
+        _resolve_solver_mode("warp", logreg_loss, params, batches, 2)
+    for mode in ("flat", "per_leaf"):
+        assert _resolve_solver_mode(mode, logreg_loss, params, batches,
+                                    2) == mode
+
+
+def test_resolve_mode_auto_is_flat_on_cpu(stacked):
+    params, _, batches, _, _ = stacked
+    assert jax.default_backend() == "cpu"
+    assert _resolve_solver_mode("auto", logreg_loss, params, batches,
+                                2) == "flat"
+
+
+def test_resolve_mode_explicit_fused_errors(stacked):
+    params, _, batches, _, _ = stacked
+
+    def unregistered_loss(w, batch):
+        return 0.0
+
+    with pytest.raises(ValueError, match="no SolverSpec is registered"):
+        _resolve_solver_mode("fused_step", unregistered_loss, params,
+                             batches, 2)
+    # registered spec, but the shape gate rejects (float labels)
+    bad = dict(batches, y=batches["y"].astype(jnp.float32))
+    with pytest.raises(ValueError, match="rejects"):
+        _resolve_solver_mode("fused_epoch", logreg_loss, params, bad, 2)
+
+
+def test_config_validates_local_solver():
+    with pytest.raises(ValueError, match="local_solver"):
+        FederatedConfig(local_solver="bogus")
+    for mode in SOLVER_MODES:
+        assert FederatedConfig(local_solver=mode).local_solver == mode
+
+
+def test_epoch_step_mask_closed_form():
+    """The closed-form (K, E*nb) mask == simulating the generic solver's
+    running ``done < steps_limit`` predicate step by step."""
+    valid = jnp.asarray([[1.0, 0.0, 1.0], [1.0, 1.0, 1.0]])
+    limit = jnp.asarray([3.0, 2.0])
+    epochs = 3
+    got = np.asarray(_epoch_step_mask(valid, epochs, limit))
+    want = np.zeros_like(got)
+    for k in range(2):
+        done = 0.0
+        for t in range(epochs * 3):
+            v = float(valid[k, t % 3])
+            m = v if done < float(limit[k]) else 0.0
+            want[k, t] = m
+            done += v
+    np.testing.assert_array_equal(got, want)
+    # no limit: the mask is just the tiled validity
+    np.testing.assert_array_equal(
+        np.asarray(_epoch_step_mask(valid, 2, None)),
+        np.tile(np.asarray(valid), (1, 2)))
+
+
+# ---------------------------------------------------------------------------
+# solver-level parity
+# ---------------------------------------------------------------------------
+
+def _run_mode(stacked, mode, *, cutoff=None):
+    params, corr, batches, valid, _ = stacked
+    solver = make_batched_solver(
+        logreg_loss, learning_rate=0.05, num_epochs=3,
+        with_cutoff=cutoff is not None, solver=mode)
+    if cutoff is not None:
+        return solver(params, corr, 0.1, batches, valid, cutoff)
+    return solver(params, corr, 0.1, batches, valid)
+
+
+@pytest.mark.parametrize("cutoff", [None, (2, 4, 99)])
+def test_flat_bitwise_equals_per_leaf(stacked, cutoff):
+    lim = None if cutoff is None else jnp.asarray(cutoff, jnp.float32)
+    fl = _run_mode(stacked, "flat", cutoff=lim)
+    pl = _run_mode(stacked, "per_leaf", cutoff=lim)
+    for a, b in zip(jax.tree_util.tree_leaves(fl.params),
+                    jax.tree_util.tree_leaves(pl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(fl.num_steps),
+                                  np.asarray(pl.num_steps))
+
+
+@pytest.mark.parametrize("mode", ["fused_step", "fused_epoch"])
+def test_fused_matches_scalar_solver(stacked, mode):
+    res = _run_mode(stacked, mode)
+    ref = _run_mode(stacked, "per_leaf")
+    _leaves_allclose(res.params, ref.params, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.num_steps),
+                                  np.asarray(ref.num_steps))
+
+
+@pytest.mark.parametrize("mode", ["fused_step", "fused_epoch"])
+def test_fused_cutoff_matches_scalar_cutoff(setup, stacked, mode):
+    """Per-device looped cutoff solver == fused batched cutoff solver,
+    on the real (unpadded) device batch lists."""
+    ds, _ = setup
+    params, corr, batches, valid, S = stacked
+    lim = jnp.asarray([2.0, 4.0, 99.0])
+    res = _run_mode(stacked, mode, cutoff=lim)
+    scalar = make_local_solver(logreg_loss, learning_rate=0.05,
+                               num_epochs=3, with_cutoff=True)
+    for i, k in enumerate(S):
+        corr_k = jax.tree_util.tree_map(lambda x, i=i: x[i], corr)
+        ref = scalar(params, corr_k, 0.1, ds.device_batches(int(k)),
+                     lim[i])
+        got = jax.tree_util.tree_map(lambda x, i=i: x[i], res.params)
+        _leaves_allclose(got, ref.params, atol=1e-5)
+        assert int(res.num_steps[i]) == int(ref.num_steps)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: every algorithm on the fused whole-epoch kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_engine_fused_epoch_parity_per_algorithm(setup, algo):
+    """Batched engine on local_solver='fused_epoch' vs the looped
+    reference engine: 3 rounds, partial participation, heterogeneous
+    device sizes — same contract as the generic batched path."""
+    ds, params = setup
+    kw = dict(algorithm=algo, num_devices=8, devices_per_round=4,
+              local_epochs=2, learning_rate=0.05, mu=0.01, seed=7,
+              correction_decay=0.9)
+    states = {}
+    for engine, solver in (("loop", "auto"), ("batched", "fused_epoch")):
+        tr = FederatedTrainer(logreg_loss, ds, FederatedConfig(
+            engine=engine, local_solver=solver, **kw))
+        st = tr.init(params)
+        for _ in range(3):
+            st = tr.round(st)
+        states[engine] = st
+    lo, ba = states["loop"], states["batched"]
+    _leaves_allclose(lo.params, ba.params, atol=1e-5)
+    assert lo.comm_rounds == ba.comm_rounds
+
+
+def test_scan_driver_runs_fused_epoch(setup):
+    """round_driver='scan' + fused_epoch == python driver + fused_epoch
+    (injected selections make the drivers comparable)."""
+    ds, params = setup
+    rng = np.random.default_rng(11)
+    sel = np.stack([
+        np.stack([rng.choice(8, 4, replace=False) for _ in range(2)])
+        for _ in range(3)])
+    outs = {}
+    for driver in ("python", "scan"):
+        cfg = FederatedConfig(
+            algorithm="feddane", num_devices=8, devices_per_round=4,
+            local_epochs=2, learning_rate=0.05, mu=0.01, seed=7,
+            engine="batched", local_solver="fused_epoch",
+            round_driver=driver, chunk_rounds=3)
+        tr = FederatedTrainer(logreg_loss, ds, cfg)
+        outs[driver] = tr.run(params, 3, selections=sel)
+    _, f_py = outs["python"]
+    _, f_sc = outs["scan"]
+    _leaves_allclose(f_py, f_sc, atol=1e-6)
