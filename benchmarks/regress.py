@@ -40,10 +40,20 @@ def load(path: str) -> dict:
 
 
 def compare(baseline: dict, current: dict, *, tol: float,
-            absolute: bool) -> list[str]:
-    """Regression messages (empty = green)."""
-    base = {e["name"]: e for e in baseline["entries"]}
-    cur = {e["name"]: e for e in current["entries"]}
+            absolute: bool, modes: set[str] | None = None) -> list[str]:
+    """Regression messages (empty = green).
+
+    ``modes`` restricts the comparison to entries whose ``mode`` field
+    is in the set (both sides), so one bench JSON can carry several
+    comparison groups while CI gates only the deterministic ones (e.g.
+    ``async_round`` in BENCH_round.json, whose speedups are simulated-
+    clock ratios, while the wallclock timing sweeps stay ungated).
+    """
+    def keep(e):
+        return modes is None or e.get("mode") in modes
+
+    base = {e["name"]: e for e in baseline["entries"] if keep(e)}
+    cur = {e["name"]: e for e in current["entries"] if keep(e)}
     problems = []
     missing = sorted(set(base) - set(cur))
     if missing:
@@ -79,19 +89,24 @@ def main(argv=None) -> int:
                    help="allowed fractional regression (default 0.15)")
     p.add_argument("--absolute", action="store_true",
                    help="also gate raw ms_per_round (same-machine only)")
+    p.add_argument("--modes", default=None,
+                   help="comma-separated mode filter: only gate entries "
+                        "whose 'mode' field matches (default: all)")
     args = p.parse_args(argv)
 
     baseline = load(args.baseline)
     current = load(args.current)
+    modes = set(args.modes.split(",")) if args.modes else None
     problems = compare(baseline, current, tol=args.tol,
-                       absolute=args.absolute)
+                       absolute=args.absolute, modes=modes)
     if problems:
         print(f"regress: {len(problems)} regression(s) vs "
               f"{args.baseline}:", file=sys.stderr)
         for msg in problems:
             print(f"  - {msg}", file=sys.stderr)
         return 1
-    n = len(baseline["entries"])
+    n = sum(1 for e in baseline["entries"]
+            if modes is None or e.get("mode") in modes)
     print(f"regress: OK — {n} baseline entries within "
           f"{args.tol:.0%} ({'absolute+ratio' if args.absolute else 'ratio'} mode)")
     return 0

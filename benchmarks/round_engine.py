@@ -61,7 +61,24 @@ numbers land, per regime:
   (finite loss, telemetry present), not a perf gate.
 - With a single visible device only the ``mesh_devices=1`` baseline
   rows are emitted.
+
+Sync-vs-async A/B (``async_round_*`` rows)
+------------------------------------------
+The buffered driver's claim (see core/async_engine.py) is about the
+*simulated* clock, not this machine's wallclock: under a latency
+scenario it commits more server steps per unit of simulated time than
+the synchronous barrier, which waits on ``min(max latency, deadline)``
+every round.  ``async_ab`` runs the real buffered simulation
+(``round_driver="buffered"``) against a synchronous run whose wallclock
+is modeled from the SAME scenario latency quantile and the drop
+deadline, and emits ``speedup = sim_time_sync / sim_time_buffered``
+plus both loss-vs-simulated-wallclock curves.  Both clocks are
+deterministic functions of ``cfg.seed``, so the ratio is reproducible
+across machines — ``ASYNC_COMMITS`` is deliberately NOT scaled by
+``BENCH_SCALE`` — and ``benchmarks/regress.py --modes async_round``
+gates it against the committed trajectory.
 """
+import sys
 import time
 
 import jax
@@ -80,6 +97,19 @@ SHARDED_K_SWEEP = (8, 32)
 DRIVER_ROUNDS = 10
 WARMUP = 5
 BENCH_JSON = "BENCH_round.json"
+
+# sync-vs-async grid: fixed commit count (NOT BENCH_SCALE-scaled — the
+# gated speedup is a deterministic simulated-clock ratio, see module
+# docstring) and the scenarios where the barrier actually hurts
+ASYNC_COMMITS = 12
+ASYNC_SCENARIOS = ("stragglers", "hostile")
+# one representative per algorithm family for the buffered smoke:
+# plain averaging, server momentum, prox, two-phase fresh gather,
+# stale-gradient pipeline, control variates, prox center
+ASYNC_SMOKE_ALGOS = ("fedavg", "fedavgm", "fedprox", "feddane",
+                     "feddane_pipelined", "scaffold", "sdane")
+ASYNC_TELEMETRY = ("staleness_mean", "staleness_max", "buffer_wait",
+                   "anchor_age", "sim_time")
 
 
 def time_rounds(algo: str, engine: str, dataset, params, k: int,
@@ -197,6 +227,32 @@ def smoke():
                      "rounds": 2, "backend": jax.default_backend(),
                      "final_loss": float(hist["loss"][-1]),
                      "effective_k": hist["effective_k"]})
+    # buffered smoke: one asynchronous run per algorithm FAMILY (plain /
+    # momentum / prox / fresh-gather / stale-pipeline / controls /
+    # center — see ASYNC_SMOKE_ALGOS) under the stragglers latency
+    # process, asserting the per-commit staleness telemetry the event
+    # queue is contracted to record (finite, one entry per commit)
+    for algo in ASYNC_SMOKE_ALGOS:
+        cfg = FederatedConfig(
+            algorithm=algo, num_devices=8, devices_per_round=4,
+            local_epochs=1, local_batch_size=10, learning_rate=0.01,
+            mu=0.001, seed=1, round_driver="buffered", buffer_size=2,
+            scenario="stragglers", straggler_sigma=0.5, chunk_rounds=2)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, 2, eval_every=1)
+        jax.block_until_ready(final)
+        name = f"bench_smoke_buffered_{algo}"
+        assert np.isfinite(hist["loss"]).all(), f"{name}: non-finite loss"
+        for key in ASYNC_TELEMETRY:
+            assert len(hist[key]) == 2, f"{name}: missing {key} telemetry"
+            assert np.isfinite(hist[key]).all(), f"{name}: {key} not finite"
+        rows.append({"name": name, "wall_s": time.time() - t0,
+                     "rounds": 2, "backend": jax.default_backend(),
+                     "final_loss": float(hist["loss"][-1]),
+                     "staleness_mean": hist["staleness_mean"],
+                     "staleness_max": hist["staleness_max"],
+                     "sim_time": hist["sim_time"]})
     # sharded smoke: with a multi-device host (CI runs this job under
     # the 8-way forced-host flag) one full-mesh feddane run exercises
     # the shard_map round + psum aggregation end to end; asserted
@@ -257,6 +313,93 @@ def sharded_ab(params, timed_rounds: int, entries: list) -> None:
             speedup=round(speedup, 3)))
 
 
+def sync_sim_wallclock(cfg, num_rounds: int) -> float:
+    """Simulated wallclock of ``num_rounds`` synchronous barrier rounds.
+
+    Each round the server waits for the slowest of the K selected
+    devices, capped at ``straggler_deadline`` (the drop path: whoever is
+    later than the deadline is discarded, but the barrier has already
+    cost the deadline).  Latencies come from the scenario's own
+    ``latency_quantile`` on a ``default_rng(cfg.seed)`` stream, so the
+    model prices the same latency process the buffered event queue
+    simulates — it just pays the barrier for it.
+    """
+    from repro.core.scenarios import scenario_spec
+    scn = scenario_spec(cfg.scenario)
+    rng = np.random.default_rng(cfg.seed)
+    t = 0.0
+    for _ in range(num_rounds):
+        lat = np.asarray(scn.latency_quantile(
+            cfg, rng.random(cfg.devices_per_round)))
+        t += min(float(lat.max()), cfg.straggler_deadline)
+    return t
+
+
+def async_ab(params, entries: list) -> None:
+    """Sync-vs-async grid: loss vs *simulated* wallclock per scenario.
+
+    Runs the buffered driver for ``ASYNC_COMMITS`` commits under each
+    latency scenario and a python-driver synchronous run of the same
+    length, prices the sync run's clock with :func:`sync_sim_wallclock`,
+    and emits the pair with ``speedup = sim_sync / sim_buffered`` —
+    server steps per unit simulated time, the acceptance ratio the
+    regression gate holds (``--modes async_round``).
+    """
+    dataset = make_synthetic(1, 1, num_devices=30, seed=0)
+    k, m = 8, 4
+    for scn_name in ASYNC_SCENARIOS:
+        kw = dict(num_devices=30, devices_per_round=k, local_epochs=2,
+                  local_batch_size=10, learning_rate=0.01, mu=0.001,
+                  seed=1, scenario=scn_name, straggler_sigma=0.6)
+        cfg_s = FederatedConfig(algorithm="feddane",
+                                round_driver="python", **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg_s)
+        t0 = time.time()
+        hist_s, final = tr.run(params, ASYNC_COMMITS, eval_every=1)
+        jax.block_until_ready(final)
+        sync_wall = time.time() - t0
+        sim_s = sync_sim_wallclock(cfg_s, ASYNC_COMMITS)
+
+        cfg_b = FederatedConfig(algorithm="feddane",
+                                round_driver="buffered", buffer_size=m,
+                                **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg_b)
+        t0 = time.time()
+        hist_b, final = tr.run(params, ASYNC_COMMITS, eval_every=1)
+        jax.block_until_ready(final)
+        buf_wall = time.time() - t0
+        sim_b = hist_b["sim_time"][-1]
+        speedup = sim_s / max(sim_b, 1e-12)
+
+        emit(f"async_round_feddane_{scn_name}_sync",
+             sync_wall / ASYNC_COMMITS,
+             f"sim_time={sim_s:.2f} loss={hist_s['loss'][-1]:.4f}")
+        emit(f"async_round_feddane_{scn_name}_buffered",
+             buf_wall / ASYNC_COMMITS,
+             f"sim_time={sim_b:.2f} loss={hist_b['loss'][-1]:.4f} "
+             f"speedup={speedup:.2f}x")
+        entries.append(bench_entry(
+            f"async_round_feddane_{scn_name}_sync", mode="async_round",
+            driver="python", k=k,
+            ms_per_round=sync_wall / ASYNC_COMMITS * 1e3,
+            algo="feddane", rounds=ASYNC_COMMITS,
+            sim_time=round(sim_s, 4),
+            final_loss=float(hist_s["loss"][-1]),
+            loss_curve=[round(x, 5) for x in hist_s["loss"]]))
+        entries.append(bench_entry(
+            f"async_round_feddane_{scn_name}_buffered",
+            mode="async_round", driver="buffered", k=k,
+            ms_per_round=buf_wall / ASYNC_COMMITS * 1e3,
+            algo="feddane", rounds=ASYNC_COMMITS, buffer_size=m,
+            sim_time=round(sim_b, 4), speedup=round(speedup, 3),
+            final_loss=float(hist_b["loss"][-1]),
+            loss_curve=[round(x, 5) for x in hist_b["loss"]],
+            sim_times=[round(x, 4) for x in hist_b["sim_time"]],
+            staleness_mean=round(float(np.mean(
+                hist_b["staleness_mean"])), 4),
+            staleness_max=float(np.max(hist_b["staleness_max"]))))
+
+
 def main():
     dataset = make_synthetic(1, 1, num_devices=30, seed=0)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
@@ -302,8 +445,24 @@ def main():
             algo="feddane", rounds=num_rounds,
             speedup=round(speedup, 3)))
     sharded_ab(params, timed, entries)
+    async_ab(params, entries)
     write_bench_json(BENCH_JSON, entries)
 
 
+def main_async_only(out: str = BENCH_JSON) -> None:
+    """Emit ONLY the ``async_round`` grid (CI's bench-smoke gate path:
+    fast and deterministic — no engine/driver/sharded timing sweeps)."""
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    entries = []
+    async_ab(params, entries)
+    write_bench_json(out, entries)
+
+
 if __name__ == "__main__":
-    main()
+    if "--async-only" in sys.argv:
+        out = BENCH_JSON
+        if "--out" in sys.argv:
+            out = sys.argv[sys.argv.index("--out") + 1]
+        main_async_only(out)
+    else:
+        main()

@@ -7,8 +7,10 @@ roofline.  Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--smoke`` is the CI perf-path canary: a tiny multi-round run of EVERY
 algorithm in the strategy registry under both round drivers (python +
-scan) that must complete with finite losses — plus, on multi-device
-hosts (CI's 8-way forced-host step), one mesh-sharded run.  It prints
+scan) that must complete with finite losses — plus one buffered-driver
+(async event-queue) run per algorithm family with the staleness
+telemetry asserted finite, and, on multi-device hosts (CI's 8-way
+forced-host step), one mesh-sharded run.  It prints
 one timing line and writes a JSON artifact, so a regression on the
 benchmark path — or a registered spec that breaks a driver — fails CI
 instead of lurking until the next full benchmark run.
@@ -36,13 +38,17 @@ def smoke(out_path: str) -> None:
                      if r["name"].startswith("bench_smoke_scenario_")]
     sharded_rows = [r for r in rows
                     if r["name"].startswith("bench_smoke_sharded_")]
+    buffered_rows = [r for r in rows
+                     if r["name"].startswith("bench_smoke_buffered_")]
+    special = scenario_rows + sharded_rows + buffered_rows
     algos = sorted({r["name"].replace("bench_smoke_", "")
                     .rsplit("_", 1)[0] for r in rows
-                    if r not in scenario_rows and r not in sharded_rows})
+                    if r not in special})
     print(f"bench_smoke,{wall * 1e6:.0f},"
           f"algos={len(algos)}({'+'.join(algos)}) "
           f"scenario_runs={len(scenario_rows)} "
-          f"sharded_runs={len(sharded_rows)} runs={len(rows)} "
+          f"sharded_runs={len(sharded_rows)} "
+          f"buffered_runs={len(buffered_rows)} runs={len(rows)} "
           f"rounds={rows[0]['rounds']} "
           f"backend={rows[0]['backend']} out={out_path} ok")
 

@@ -11,7 +11,13 @@ execution paths, with per-round participation telemetry in the run
 history.
 
   PYTHONPATH=src python examples/scenario_stress.py
+  PYTHONPATH=src python examples/scenario_stress.py --full   # all 9 algos
+
+``--full`` (CI's nightly grid) widens the column set from the paper's
+three headline algorithms to EVERY algorithm in the strategy registry.
 """
+import sys
+
 import jax
 
 from repro.configs.base import FederatedConfig
@@ -45,20 +51,25 @@ def run_env(dataset, params0, algo, mu, scenario, kw):
 
 
 def main():
+    algos = ALGOS
+    if "--full" in sys.argv:
+        from repro.core.strategies import available_algorithms
+        algos = [(a, 0.001) for a in available_algorithms()]
     dataset = make_synthetic(1, 1, num_devices=30, seed=0)
     params0 = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    w = max(9, max(len(a) for a, _ in algos))
     header = f"{'environment':20s}" + "".join(
-        f" {algo:>9s}" for algo, _ in ALGOS) + \
+        f" {algo:>{w}s}" for algo, _ in algos) + \
         f" {'eff K':>6s} {'dropped':>8s}"
     print(header)
     for scenario, kw in ENVIRONMENTS:
         finals = []
-        for algo, mu in ALGOS:
+        for algo, mu in algos:
             loss, eff, dropped = run_env(dataset, params0, algo, mu,
                                          scenario, kw)
             finals.append(loss)
         print(f"{scenario:20s}" + "".join(
-            f" {loss:>9.4f}" for loss in finals) +
+            f" {loss:>{w}.4f}" for loss in finals) +
             f" {eff:>6.1f} {dropped:>8.0f}")
     print("\nStragglers under a tight deadline and flaky availability "
           "shrink the round's EFFECTIVE K; FedDANE's correction is "

@@ -194,18 +194,44 @@ class FederatedConfig:
     #               batching pessimizes CPU rounds — see
     #               benchmarks/round_engine.py)
     engine: str = "auto"
-    # multi-round driver (core/engine.py ScannedDriver):
-    #   "scan"   — chunk_rounds rounds fused into ONE jax.lax.scan program:
-    #              on-device jax.random sampling, index-gathered pre-stacked
-    #              device tensors, eval inside the scan at eval_every cadence
-    #   "python" — host loop over trainer.round() (reference; required for
-    #              scaffold + sample_with_replacement)
-    #   "auto"   — "scan" wherever ``engine`` resolved to "batched"
-    #              (accelerators by default), else "python": the scanned
-    #              body is built on the batched vmapped solver, so an
-    #              explicit engine="loop" keeps the host loop unless
-    #              "scan" is also explicit
+    # multi-round driver (core/engine.py ScannedDriver,
+    # core/async_engine.py BufferedDriver):
+    #   "scan"     — chunk_rounds rounds fused into ONE jax.lax.scan
+    #                program: on-device jax.random sampling,
+    #                index-gathered pre-stacked device tensors, eval
+    #                inside the scan at eval_every cadence
+    #   "python"   — host loop over trainer.round() (reference; required
+    #                for scaffold + sample_with_replacement)
+    #   "buffered" — FedBuff-style asynchronous event-queue driver:
+    #                clients launch from (possibly stale) server
+    #                anchors, the server commits a step whenever
+    #                buffer_size updates arrive, mixing them with
+    #                staleness_fn weights.  The scenario latency process
+    #                becomes an arrival-time process instead of a round
+    #                barrier (core/async_engine.py).
+    #   "auto"     — "scan" wherever ``engine`` resolved to "batched"
+    #                (accelerators by default), else "python": the
+    #                scanned body is built on the batched vmapped
+    #                solver, so an explicit engine="loop" keeps the host
+    #                loop unless "scan" is also explicit
     round_driver: str = "auto"
+    # -- buffered (async) driver knobs (round_driver="buffered"; inert
+    #    otherwise) --
+    # M: buffered updates per server commit; 0 -> devices_per_round
+    # (commit cadence == the synchronous round, the degenerate-parity
+    # configuration)
+    buffer_size: int = 0
+    # staleness -> mixing-weight map applied at commit time
+    # (core/server.py STALENESS_FNS): "constant" weights every update
+    # 1.0 regardless of anchor age; "polynomial" is FedBuff's
+    # 1/sqrt(1 + staleness) down-weighting.  With fresh anchors
+    # (staleness 0) both give weight 1.0, so the degenerate-parity
+    # contract holds under either.
+    staleness_fn: str = "polynomial"
+    # discard updates whose anchor is more than this many commits old
+    # at arrival (the async analogue of the straggler deadline);
+    # 0 = keep everything
+    max_staleness: int = 0
     # batched local-solve kernel path (core/client.py SOLVER_MODES):
     #   "flat"     — whole-pytree flat-pack masked Pallas update, ONE
     #                launch per step for all leaves × all K devices;
@@ -275,6 +301,21 @@ class FederatedConfig:
             raise ValueError(
                 f"partial_min_work must be in (0, 1], got "
                 f"{self.partial_min_work}")
+        # buffered-driver knobs: the staleness-weight family list lives
+        # beside the weight map itself (core/server.py), like the
+        # algorithm/scenario registries above
+        from repro.core.server import STALENESS_FNS
+        if self.staleness_fn not in STALENESS_FNS:
+            raise ValueError(
+                f"unknown staleness_fn {self.staleness_fn!r}; choose "
+                f"from {', '.join(STALENESS_FNS)}")
+        for knob in ("buffer_size", "max_staleness"):
+            v = getattr(self, knob)
+            if not (isinstance(v, int) and not isinstance(v, bool)
+                    and v >= 0):
+                raise ValueError(
+                    f"{knob} must be a non-negative int (0 = default/"
+                    f"unlimited), got {v!r}")
         if self.local_solver not in (
                 "auto", "flat", "per_leaf", "fused_step", "fused_epoch"):
             # mirror of core.client.SOLVER_MODES (configs is a leaf

@@ -1,6 +1,7 @@
 """Federated optimization core: the paper's contribution (FedDANE + baselines)."""
 from repro.core.algorithms import (TWO_ROUND_ALGOS, FederatedState,
                                    FederatedTrainer)
+from repro.core.async_engine import BufferedDriver
 from repro.core.client import (LocalResult, gamma_inexactness,
                                make_batched_grad_fn, make_batched_solver,
                                make_exact_solver, make_grad_fn,
@@ -18,7 +19,7 @@ from repro.core.theory import (b_dissimilarity, corollary4_mu, rho_convex,
 
 __all__ = [
     "FederatedTrainer", "FederatedState", "TWO_ROUND_ALGOS", "RoundEngine",
-    "ScannedDriver", "make_scanned_run",
+    "ScannedDriver", "BufferedDriver", "make_scanned_run",
     "AlgorithmSpec", "register_algorithm", "algorithm_spec",
     "available_algorithms",
     "ScenarioSpec", "register_scenario", "scenario_spec",

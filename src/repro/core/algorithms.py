@@ -56,6 +56,12 @@ selects how ``run()`` drives the *round loop*:
 - ``"python"``: this module's host loop over ``round()`` — the reference
   driver, and the only one supporting control-variate specs (scaffold)
   with ``sample_with_replacement``.
+- ``"buffered"``: the FedBuff-style asynchronous event-queue driver
+  (core/async_engine.py BufferedDriver) — no round barrier: clients
+  launch from possibly stale anchors and the server commits whenever
+  ``cfg.buffer_size`` updates arrive, mixed with ``cfg.staleness_fn``
+  weights.  ``num_rounds`` counts server commits; histories grow
+  per-commit staleness telemetry.
 - ``"auto"``: scan wherever ``engine`` resolved to batched (accelerators
   by default), python otherwise — so an explicit ``engine="loop"`` keeps
   the authoritative host loop unless ``"scan"`` is also explicit.
@@ -190,9 +196,15 @@ class FederatedTrainer:
             self.engine = None
         else:
             raise ValueError(f"unknown engine {cfg.engine!r}")
-        if cfg.round_driver not in ("python", "scan", "auto"):
+        if cfg.round_driver not in ("python", "scan", "auto", "buffered"):
             raise ValueError(f"unknown round_driver {cfg.round_driver!r}")
         self._scanned: Optional[ScannedDriver] = None   # built lazily
+        self._buffered = None                           # built lazily
+        if cfg.round_driver == "buffered":
+            # fail fast on incompatible configs (mesh, scaffold +
+            # replacement) instead of at first run()
+            from repro.core.async_engine import BufferedDriver
+            self._buffered = BufferedDriver(loss_fn, dataset, cfg)
         self._sample_queue: List[np.ndarray] = []       # test injection
         self._eval_loss = _make_eval_loss(loss_fn)
 
@@ -208,6 +220,8 @@ class FederatedTrainer:
 
     def _resolve_driver(self) -> str:
         driver = self.cfg.round_driver
+        if driver == "buffered":
+            return driver
         if driver == "auto":
             # Scan only where the batched engine was selected: the scanned
             # body runs on the vmapped solver, so an explicit
@@ -499,7 +513,15 @@ class FederatedTrainer:
         FedDANE phase A, row 1 FedDANE phase B.  Used by parity tests to
         make the two drivers' sampling comparable.
         """
-        if self._resolve_driver() == "scan":
+        driver = self._resolve_driver()
+        if driver == "buffered":
+            # asynchronous event-queue driver (core/async_engine.py):
+            # num_rounds counts server commits; history carries the
+            # per-commit staleness telemetry on top of the usual fields
+            return self._buffered.run(
+                params, num_rounds, eval_every=eval_every, verbose=verbose,
+                checkpoint_dir=checkpoint_dir, selections=selections)
+        if driver == "scan":
             if self._scanned is None:
                 self._scanned = ScannedDriver(
                     self.loss_fn, self.dataset, self.cfg,

@@ -44,6 +44,16 @@ controls once, not twice (the looped path applies duplicates
 sequentially), so ``FederatedTrainer`` routes that combination to the
 looped path even when ``engine="batched"``.
 
+Both this engine and the scanned driver below keep the synchronous
+round barrier: the server steps once every selected device (or the
+scenario's deadline) has been accounted for.  The asynchronous
+alternative — clients launching from stale anchors, the server
+committing whenever ``buffer_size`` updates arrive — is the fourth
+driver, ``core/async_engine.py``'s ``BufferedDriver``
+(``round_driver="buffered"``), which reuses this module's batched
+solver for its cohort launches and the same ``AlgorithmSpec``
+interpretation contract.
+
 Scanned multi-round driver
 --------------------------
 ``ScannedDriver`` (``make_scanned_run``) is the layer above: it fuses

@@ -9,18 +9,19 @@ execution path — and ``FederatedConfig.scenario`` validation — picks it
 up immediately.
 """
 from repro.core.scenarios.spec import (DEADLINE_POLICIES, ENV_CHANNELS,
-                                       RoundEnv, ScenarioSpec,
+                                       EventEnv, RoundEnv, ScenarioSpec,
                                        availability_mask,
                                        available_scenarios, env_channels,
                                        is_trivial, realize_env,
+                                       realize_event_env,
                                        register_scenario, scenario_spec,
                                        unregister_scenario)
 from repro.core.scenarios import builtin  # noqa: F401  (registers specs)
 
 __all__ = [
-    "ScenarioSpec", "RoundEnv",
+    "ScenarioSpec", "RoundEnv", "EventEnv",
     "register_scenario", "unregister_scenario", "scenario_spec",
-    "available_scenarios", "realize_env", "availability_mask",
-    "env_channels", "is_trivial",
+    "available_scenarios", "realize_env", "realize_event_env",
+    "availability_mask", "env_channels", "is_trivial",
     "DEADLINE_POLICIES", "ENV_CHANNELS",
 ]

@@ -180,6 +180,57 @@ def realize_env(spec: ScenarioSpec, cfg, num_devices: int, sel, t,
                     work=jnp.clip(work, 1e-6, 1.0))
 
 
+class EventEnv(NamedTuple):
+    """One cohort launch's realized environment under the event-queue
+    (buffered async) interpretation of a scenario — see
+    :func:`realize_event_env`."""
+    delivered: Any  # float (K,) 0/1 — the finished update reaches the server
+    work: Any       # float (K,) in (0, 1] — fraction of local steps done
+    latency: Any    # float (K,) > 0 — completion delay, nominal-round units
+
+
+def realize_event_env(spec: ScenarioSpec, cfg, num_devices: int, sel, t,
+                      uniforms: Dict[str, Any]) -> EventEnv:
+    """The *event-queue* scenario interpreter (buffered async driver).
+
+    Same inputs and uniform channels as :func:`realize_env`, different
+    round semantics: there is no round barrier, so the latency process
+    is not compared against ``cfg.straggler_deadline`` — it *is* the
+    per-device arrival time.  A straggler simply lands later (and
+    therefore staler); the async analogue of the deadline is
+    ``FederatedConfig.max_staleness``, enforced by the driver at
+    arrival.  Availability and dropout keep their meaning (the update
+    never reaches the server — ``delivered = 0``), and the
+    deterministic ``work_fraction`` assignment still truncates local
+    steps.  Specs with no latency process complete in exactly 1.0
+    nominal round — which keeps cohorts aligned and is what makes the
+    zero-latency degenerate-parity configuration equal the synchronous
+    driver.
+    """
+    k = sel.shape[0]
+    delivered = jnp.ones((k,), jnp.float32)
+    work = jnp.ones((k,), jnp.float32)
+    latency = jnp.ones((k,), jnp.float32)
+    if spec.availability is not None:
+        p = jnp.asarray(spec.availability(cfg, num_devices, t),
+                        jnp.float32)
+        delivered = delivered * (uniforms["avail"][sel] < p[sel])
+    if spec.latency_quantile is not None:
+        latency = jnp.asarray(
+            spec.latency_quantile(cfg, uniforms["latency"][sel]),
+            jnp.float32)
+        latency = jnp.maximum(latency, 1e-6)
+    if spec.dropout:
+        delivered = delivered * (uniforms["dropout"][sel]
+                                 >= cfg.dropout_rate)
+    if spec.work_fraction is not None:
+        f = jnp.asarray(spec.work_fraction(cfg, num_devices), jnp.float32)
+        work = work * f[sel]
+    return EventEnv(delivered=delivered.astype(jnp.float32),
+                    work=jnp.clip(work, 1e-6, 1.0),
+                    latency=latency)
+
+
 def availability_mask(spec: ScenarioSpec, cfg, num_devices: int, sel, t,
                       uniforms: Dict[str, Any]):
     """The availability-only 0/1 mask for ``sel`` — what gates a

@@ -152,6 +152,56 @@ def aggregate_stacked_masked(tree, active, fallback,
     return jax.tree_util.tree_map(mmean, tree, fallback)
 
 
+#: Staleness -> mixing-weight families the buffered async driver
+#: accepts (``FederatedConfig.staleness_fn``); the map itself is
+#: :func:`staleness_weight`.
+STALENESS_FNS = ("constant", "polynomial")
+
+
+def staleness_weight(name: str, staleness):
+    """Mixing weight for a buffered update whose anchor is ``staleness``
+    server commits old (FedBuff, Nguyen et al. 2022).
+
+    ``"constant"`` weights every update 1.0 — buffered aggregation
+    degenerates to the synchronous mean, which is what the
+    degenerate-parity gate pins.  ``"polynomial"`` is FedBuff's
+    ``(1 + s)^(-1/2)`` down-weighting.  Traceable; ``staleness`` may be
+    a scalar or an ``(M,)`` vector of per-update staleness counts.
+    """
+    import jax.numpy as jnp
+
+    s = jnp.asarray(staleness, jnp.float32)
+    if name == "constant":
+        return jnp.ones_like(s)
+    if name == "polynomial":
+        return (1.0 + s) ** -0.5
+    raise ValueError(
+        f"unknown staleness_fn {name!r}; choose from "
+        f"{', '.join(STALENESS_FNS)}")
+
+
+def aggregate_buffered(deltas, weights):
+    """Staleness-weighted mean of a full commit buffer: ``deltas`` is a
+    pytree with a leading buffer axis M (each row one client's
+    pseudo-gradient ``anchor_i - w_i``), ``weights`` a float ``(M,)``
+    vector from :func:`staleness_weight`.  Returns the unstacked
+    weighted mean — the commit's aggregate pseudo-gradient, handed to
+    :func:`server_step` as ``w - pg``.  With constant weights this is
+    exactly ``aggregate_stacked`` (the synchronous mean), which is the
+    buffered driver's degenerate-parity anchor.  Traceable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    wsum = jnp.maximum(weights.sum(), 1e-12)
+
+    def wmean(x):
+        w = weights.reshape(weights.shape + (1,) * (x.ndim - 1))
+        return (x * w).sum(axis=0) / wsum
+
+    return jax.tree_util.tree_map(wmean, deltas)
+
+
 def server_step(w0, w_agg, opt=None, opt_state=None):
     """Post-aggregation server update (Reddi et al. server-opt view).
 

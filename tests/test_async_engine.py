@@ -1,0 +1,290 @@
+"""Asynchronous buffered driver (core/async_engine.py) contracts.
+
+Three contract families are pinned here:
+
+1. **Degenerate parity**: with ``buffer_size == K``, a latency-free
+   scenario, constant staleness weighting, and the same injected
+   selection sequence, every commit of the buffered driver IS a
+   synchronous round — final params and loss history match the python
+   driver at atol 1e-5 for every registered algorithm.
+2. **Event-queue edge cases**: an environment that never delivers an
+   update terminates at the event horizon with an empty history instead
+   of spinning; updates beyond ``max_staleness`` are discarded (and
+   counted as dropped); duplicate in-flight completions of one client
+   are well-defined (arrival order, last writer wins).
+3. **Determinism**: a fixed seed reproduces the entire event stream —
+   commit times, staleness telemetry, losses — run after run (the
+   per-driver half of the docs/determinism.md contract; cross-driver
+   identity is explicitly NOT required).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from conftest import leaves_allclose
+
+from repro.configs.base import FederatedConfig
+from repro.core import FederatedTrainer, server
+from repro.core.async_engine import BufferedDriver
+from repro.core.scenarios import (ScenarioSpec, register_scenario,
+                                  unregister_scenario)
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ALGOS = ["fedavg", "fedprox", "feddane", "inexact_dane",
+         "feddane_pipelined", "feddane_decayed", "scaffold",
+         "fedavgm", "sdane"]
+NUM_ROUNDS = 3
+TELEMETRY_KEYS = ("staleness_mean", "staleness_max", "buffer_wait",
+                  "anchor_age", "sim_time")
+
+BASE_KW = dict(num_devices=8, devices_per_round=4, local_epochs=2,
+               learning_rate=0.05, mu=0.01, seed=7, correction_decay=0.9)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic(0.5, 0.5, num_devices=8, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    sel = np.stack([
+        np.stack([rng.choice(8, 4, replace=False) for _ in range(2)])
+        for _ in range(NUM_ROUNDS)])
+    return ds, params, sel
+
+
+# -- 1. degenerate parity ---------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_degenerate_parity(setup, algo):
+    """buffer_size=K + zero latency + constant weights == python driver."""
+    ds, params, sel = setup
+    cfg_s = FederatedConfig(algorithm=algo, round_driver="python",
+                            engine="loop", **BASE_KW)
+    cfg_b = FederatedConfig(algorithm=algo, round_driver="buffered",
+                            staleness_fn="constant", **BASE_KW)
+    hist_s, p_s = FederatedTrainer(logreg_loss, ds, cfg_s).run(
+        params, NUM_ROUNDS, selections=sel)
+    hist_b, p_b = FederatedTrainer(logreg_loss, ds, cfg_b).run(
+        params, NUM_ROUNDS, selections=sel)
+    leaves_allclose(p_s, p_b, atol=1e-5)
+    np.testing.assert_allclose(hist_s["loss"], hist_b["loss"], atol=1e-5)
+    # each commit was a full synchronous round with fresh anchors
+    assert hist_b["staleness_max"] == [0.0] * NUM_ROUNDS
+    assert hist_b["effective_k"] == hist_s["effective_k"]
+    assert hist_b["sim_time"] == [float(t + 1) for t in range(NUM_ROUNDS)]
+
+
+def test_polynomial_weighting_is_degenerate_at_zero_staleness(setup):
+    """The default polynomial staleness_fn weighs fresh updates 1.0, so
+    it too satisfies the degenerate contract (weights cancel in the
+    normalized mean)."""
+    ds, params, sel = setup
+    out = {}
+    for fn in ("constant", "polynomial"):
+        cfg = FederatedConfig(algorithm="feddane",
+                              round_driver="buffered",
+                              staleness_fn=fn, **BASE_KW)
+        out[fn] = FederatedTrainer(logreg_loss, ds, cfg).run(
+            params, NUM_ROUNDS, selections=sel)
+    leaves_allclose(out["constant"][1], out["polynomial"][1], atol=0.0)
+
+
+def test_staleness_weight_families():
+    """constant -> all ones; polynomial -> FedBuff (1+s)^{-1/2}."""
+    s = np.array([0.0, 1.0, 3.0, 8.0], np.float32)
+    np.testing.assert_allclose(
+        np.asarray(server.staleness_weight("constant", s)), np.ones(4))
+    np.testing.assert_allclose(
+        np.asarray(server.staleness_weight("polynomial", s)),
+        (1.0 + s) ** -0.5, rtol=1e-6)
+    with pytest.raises(ValueError, match="staleness_fn"):
+        server.staleness_weight("linear", s)
+
+
+def test_aggregate_buffered_weighted_mean():
+    """aggregate_buffered == the numpy weighted mean, per leaf."""
+    rng = np.random.default_rng(0)
+    buf = {"a": rng.normal(size=(3, 4)).astype(np.float32),
+           "b": rng.normal(size=(3, 2, 2)).astype(np.float32)}
+    w = np.array([1.0, 0.5, 0.25], np.float32)
+    out = server.aggregate_buffered(
+        jax.tree_util.tree_map(lambda x: jax.numpy.asarray(x), buf),
+        jax.numpy.asarray(w))
+    for key in buf:
+        ref = np.tensordot(w, buf[key], axes=(0, 0)) / w.sum()
+        np.testing.assert_allclose(np.asarray(out[key]), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -- 2. event-queue edge cases ----------------------------------------------
+
+def test_empty_buffer_at_horizon(setup):
+    """An environment that never delivers an update must terminate at
+    the event horizon with zero commits — empty history, params
+    untouched — instead of spinning forever."""
+    ds, params, _ = setup
+    cfg = FederatedConfig(algorithm="fedavg", round_driver="buffered",
+                          scenario="bernoulli", avail_prob=1e-9,
+                          **{**BASE_KW, "devices_per_round": 2})
+    hist, out = FederatedTrainer(logreg_loss, ds, cfg).run(params, 1)
+    assert hist["loss"] == [] and hist["sim_time"] == []
+    leaves_allclose(params, out, atol=0.0)
+
+
+def test_all_updates_stale_beyond_max_staleness(setup):
+    """With a bimodal latency process and max_staleness=1, every slow
+    arrival lands with staleness > 1 and is discarded: committed
+    staleness stays within the bound and the history counts the
+    discards as dropped."""
+    ds, params, _ = setup
+    register_scenario(ScenarioSpec(
+        name="bimodal_latency_test",
+        summary="half the fleet returns in 1 round, half in 3",
+        latency_quantile=lambda cfg, u: 1.0 + 2.0 * (u > 0.5)))
+    try:
+        cfg = FederatedConfig(
+            algorithm="fedavg", round_driver="buffered",
+            scenario="bimodal_latency_test", buffer_size=1,
+            max_staleness=1, **BASE_KW)
+        hist, out = FederatedTrainer(logreg_loss, ds, cfg).run(params, 10)
+        assert len(hist["sim_time"]) == 10
+        assert max(hist["staleness_max"]) <= 1.0
+        assert sum(hist["dropped"]) > 0      # the slow half was discarded
+        assert np.isfinite(hist["loss"]).all()
+    finally:
+        unregister_scenario("bimodal_latency_test")
+
+
+def test_duplicate_client_completions(setup):
+    """One client may have several solves in flight at once (relaunched
+    while an earlier update is still traveling).  Both completions are
+    delivered and committed; control state resolves by arrival order."""
+    ds, params, _ = setup
+    register_scenario(ScenarioSpec(
+        name="slowpoke_test",
+        summary="deterministic spread: device latency 1 + u",
+        latency_quantile=lambda cfg, u: 1.0 + u))
+    try:
+        sel = np.tile(np.array([[0, 1, 2, 3]]), (40, 1))
+        for algo in ("fedavg", "scaffold"):
+            cfg = FederatedConfig(
+                algorithm=algo, round_driver="buffered",
+                scenario="slowpoke_test", buffer_size=1, **BASE_KW)
+            hist, out = FederatedTrainer(logreg_loss, ds, cfg).run(
+                params, 8, selections=sel)
+            assert len(hist["sim_time"]) == 8
+            assert np.isfinite(hist["loss"]).all()
+            assert all(np.isfinite(hist[k]).all()
+                       for k in TELEMETRY_KEYS)
+    finally:
+        unregister_scenario("slowpoke_test")
+
+
+def test_validation():
+    """Knob validation fails fast: bad staleness_fn / negative knobs at
+    config construction, incompatible spec combos at trainer build."""
+    with pytest.raises(ValueError, match="staleness_fn"):
+        FederatedConfig(staleness_fn="nope")
+    with pytest.raises(ValueError, match="buffer_size"):
+        FederatedConfig(buffer_size=-1)
+    with pytest.raises(ValueError, match="max_staleness"):
+        FederatedConfig(max_staleness=-2)
+    ds = make_synthetic(0.5, 0.5, num_devices=4, seed=0)
+    cfg = FederatedConfig(algorithm="scaffold", round_driver="buffered",
+                          sample_with_replacement=True, num_devices=4,
+                          devices_per_round=2)
+    with pytest.raises(ValueError, match="sequential"):
+        FederatedTrainer(logreg_loss, ds, cfg)
+
+
+# -- 3. determinism + telemetry ---------------------------------------------
+
+def test_event_stream_seed_reproducible(setup):
+    """Fixed seed => identical event stream: commit times, staleness,
+    losses — across repeated run() calls AND fresh driver instances."""
+    ds, params, _ = setup
+    cfg = FederatedConfig(algorithm="feddane", round_driver="buffered",
+                          scenario="hostile", buffer_size=2,
+                          straggler_sigma=0.8, **BASE_KW)
+    tr = FederatedTrainer(logreg_loss, ds, cfg)
+    h1, p1 = tr.run(params, 5)
+    h2, p2 = tr.run(params, 5)                    # same trainer, re-run
+    drv = BufferedDriver(logreg_loss, ds, cfg)    # fresh driver
+    h3, p3 = drv.run(params, 5)
+    assert h1 == h2 == h3
+    leaves_allclose(p1, p2, atol=0.0)
+    leaves_allclose(p1, p3, atol=0.0)
+
+
+def test_staleness_telemetry_recorded(setup):
+    """Every commit records the async telemetry quintet, finite, one
+    entry per commit, alongside the synchronous effective-K fields."""
+    ds, params, _ = setup
+    cfg = FederatedConfig(algorithm="scaffold", round_driver="buffered",
+                          scenario="stragglers", buffer_size=2,
+                          straggler_sigma=0.6, **BASE_KW)
+    hist, _ = FederatedTrainer(logreg_loss, ds, cfg).run(params, 5)
+    for key in TELEMETRY_KEYS + ("intended_k", "effective_k", "dropped"):
+        assert len(hist[key]) == 5, key
+        assert np.isfinite(hist[key]).all(), key
+    assert hist["effective_k"] == [2.0] * 5       # M commits exactly
+    assert all(a >= b for a, b in zip(hist["intended_k"],
+                                      hist["effective_k"]))
+    assert hist["sim_time"] == sorted(hist["sim_time"])
+
+
+def test_more_commits_per_simtime_than_sync_drop(setup):
+    """The acceptance directional claim: under ``stragglers`` the
+    buffered driver commits more server steps per unit of simulated
+    wallclock than the synchronous drop-path barrier (which waits for
+    the deadline whenever anyone misses it).  Uses the same sync
+    wallclock model as benchmarks/round_engine.py."""
+    ds, params, _ = setup
+    kw = {**BASE_KW, "scenario": "stragglers", "straggler_sigma": 0.6}
+    rounds = 8
+    cfg_b = FederatedConfig(algorithm="fedavg", round_driver="buffered",
+                            buffer_size=2, **kw)
+    hist, _ = FederatedTrainer(logreg_loss, ds, cfg_b).run(params, rounds)
+    buffered_rate = rounds / hist["sim_time"][-1]
+
+    # synchronous barrier model: the round ends at max(latency) if all
+    # K devices beat the deadline, else at the deadline (late devices
+    # are dropped — same lognormal process, straggler machinery of PR 4)
+    rng = np.random.default_rng(kw["seed"])
+    t_sync = 0.0
+    for _ in range(rounds):
+        lat = np.exp(kw["straggler_sigma"]
+                     * rng.standard_normal(kw["devices_per_round"]))
+        t_sync += min(float(lat.max()), cfg_b.straggler_deadline)
+    sync_rate = rounds / t_sync
+    assert buffered_rate > sync_rate
+
+
+def test_buffer_size_zero_defaults_to_cohort(setup):
+    """buffer_size=0 means M=K: commit cadence == the synchronous round."""
+    ds, params, sel = setup
+    cfg = FederatedConfig(algorithm="fedavg", round_driver="buffered",
+                          buffer_size=0, **BASE_KW)
+    hist, _ = FederatedTrainer(logreg_loss, ds, cfg).run(
+        params, 2, selections=sel)
+    assert hist["effective_k"] == [4.0, 4.0]
+
+
+def test_run_contract_matches_trainer(setup):
+    """The buffered driver honors eval_every and prices communication
+    with the spec's per-round cost, like the synchronous drivers."""
+    ds, params, sel = setup
+    cfg = FederatedConfig(algorithm="fedavg", round_driver="buffered",
+                          **BASE_KW)
+    hist, _ = FederatedTrainer(logreg_loss, ds, cfg).run(
+        params, NUM_ROUNDS, eval_every=2, selections=sel)
+    # commits 1 (t=0) and 3 (last) evaluated, commit 2 skipped
+    assert hist["round"] == [1.0, 3.0]
+    assert len(hist["sim_time"]) == NUM_ROUNDS
+    cfg2 = dataclasses.replace(cfg, algorithm="feddane")
+    hist2, _ = FederatedTrainer(logreg_loss, ds, cfg2).run(
+        params, 2, selections=sel)
+    assert hist2["comm_rounds"] == [2.0, 4.0]     # two-phase cost
