@@ -1,0 +1,122 @@
+"""Accuracy-vs-bytes communication frontier: codec x algorithm x scenario.
+
+The codec layer (core/codecs) reports honest per-round ``bytes_up`` /
+``bytes_down`` from the declared wire widths and the round's *realized*
+participation.  This module sweeps every registered codec over
+{feddane, fedavg, fedprox} x {ideal, bernoulli_low} at fixed K on the
+synthetic logistic task and writes the frontier as one versioned bench
+JSON (``benchmarks/BENCH_comm.json`` is the committed trajectory):
+
+- ``speedup`` per entry = total uplink bytes of the SAME (algo,
+  scenario) cell under ``codec="none"`` divided by this entry's — a
+  deterministic compression ratio (simulated wire, no clocks), so
+  ``regress.py --modes comm`` gates it tightly across machines.  The
+  acceptance floors ride the single-phase fedavg rows (int8 >= 3x,
+  topk >= 8x at topk_frac=0.1); FedDANE's ratios are intentionally
+  worse — its dense phase-A gradient gather dominates uplink, which is
+  exactly the pathology the frontier exposes (paper §V discussion).
+- ``final_loss`` records what the compression cost in accuracy.
+- A ``one_shot`` row records the EconML-style extreme point of the
+  frontier: ONE full-participation round, maximal local work, total
+  bytes = N dense uploads.
+
+Grid sizes are fixed (deliberately NOT scaled by BENCH_SCALE): the
+byte totals and ratios must be bit-reproducible against the committed
+baseline for the CI gate to be meaningful.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.comm_grid [--out BENCH_comm.json]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_entry, write_bench_json
+from repro.configs.base import FederatedConfig, one_shot_config
+from repro.core import FederatedTrainer
+from repro.core.codecs import available_codecs
+from repro.data import make_synthetic
+from repro.models.param import init_params
+from repro.models.small import logreg_loss, logreg_specs
+
+ALGOS = ("feddane", "fedavg", "fedprox")
+SCENARIOS = {"ideal": {}, "bernoulli_low": {"scenario": "bernoulli",
+                                            "avail_prob": 0.4}}
+ROUNDS = 8
+K = 4
+BASE_KW = dict(num_devices=10, devices_per_round=K, local_epochs=2,
+               local_batch_size=10, learning_rate=0.01, mu=0.01, seed=3,
+               correction_decay=0.9)
+
+
+def _cell(algo: str, codec: str, scn_kw: dict, ds, params):
+    cfg = FederatedConfig(algorithm=algo, codec=codec,
+                          **BASE_KW, **scn_kw)
+    tr = FederatedTrainer(logreg_loss, ds, cfg)
+    t0 = time.time()
+    hist, final = tr.run(params, ROUNDS, eval_every=ROUNDS)
+    jax.block_until_ready(final)
+    wall = time.time() - t0
+    assert np.isfinite(hist["loss"]).all(), f"{algo}/{codec}: loss blew up"
+    return {"final_loss": float(hist["loss"][-1]),
+            "bytes_up": float(sum(hist["bytes_up"])),
+            "bytes_down": float(sum(hist["bytes_down"])),
+            "wall_s": wall}
+
+
+def main(out_path: str = "BENCH_comm.json"):
+    ds = make_synthetic(0.5, 0.5, num_devices=10, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    entries = []
+    for scn_name, scn_kw in SCENARIOS.items():
+        for algo in ALGOS:
+            cells = {codec: _cell(algo, codec, scn_kw, ds, params)
+                     for codec in available_codecs()}
+            dense_up = cells["none"]["bytes_up"]
+            for codec, cell in sorted(cells.items()):
+                ratio = dense_up / max(cell["bytes_up"], 1.0)
+                entries.append(bench_entry(
+                    f"comm_{codec}_{algo}_{scn_name}", mode="comm",
+                    driver="loop", k=K,
+                    ms_per_round=cell["wall_s"] * 1e3 / ROUNDS,
+                    algo=algo, codec=codec, scenario=scn_name,
+                    speedup=round(ratio, 4),
+                    final_loss=round(cell["final_loss"], 6),
+                    bytes_up=cell["bytes_up"],
+                    bytes_down=cell["bytes_down"]))
+                print(f"comm_{codec}_{algo}_{scn_name},"
+                      f"{cell['bytes_up']:.0f},x{ratio:.2f}_"
+                      f"loss{cell['final_loss']:.4f}")
+    # the one-shot extreme point: all the local work, one commit
+    cfg = one_shot_config(10, local_epochs=16, local_batch_size=10,
+                          learning_rate=0.05, seed=3)
+    tr = FederatedTrainer(logreg_loss, ds, cfg)
+    t0 = time.time()
+    hist, final = tr.run(params, 1, eval_every=1)
+    jax.block_until_ready(final)
+    assert np.isfinite(hist["loss"]).all(), "one_shot: loss blew up"
+    entries.append(bench_entry(
+        "comm_one_shot_extreme", mode="comm", driver="loop", k=10,
+        ms_per_round=(time.time() - t0) * 1e3, algo="one_shot",
+        codec="none", scenario="ideal",
+        final_loss=round(float(hist["loss"][-1]), 6),
+        bytes_up=float(sum(hist["bytes_up"])),
+        bytes_down=float(sum(hist["bytes_down"]))))
+    # acceptance floors (single-phase uplink): keep the committed
+    # baseline honest at generation time, not just in CI comparisons
+    by_name = {e["name"]: e for e in entries}
+    assert by_name["comm_int8_fedavg_ideal"]["speedup"] >= 3.0
+    assert by_name["comm_topk_fedavg_ideal"]["speedup"] >= 8.0
+    write_bench_json(out_path, entries)
+
+
+if __name__ == "__main__":
+    out = "BENCH_comm.json"
+    if "--out" in sys.argv:
+        out = sys.argv[sys.argv.index("--out") + 1]
+    main(out)

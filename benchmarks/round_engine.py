@@ -253,6 +253,32 @@ def smoke():
                      "staleness_mean": hist["staleness_mean"],
                      "staleness_max": hist["staleness_max"],
                      "sim_time": hist["sim_time"]})
+    # codec smoke: one run per registered wire codec (core/codecs) on
+    # the batched engine, asserting finite loss AND the per-round byte
+    # telemetry the codec layer is contracted to record — a codec whose
+    # encode diverges or whose accounting vanishes fails CI here
+    from repro.core.codecs import available_codecs
+    for codec in available_codecs():
+        cfg = FederatedConfig(
+            algorithm="feddane", num_devices=8, devices_per_round=4,
+            local_epochs=1, local_batch_size=10, learning_rate=0.01,
+            mu=0.001, seed=1, engine="batched", round_driver="python",
+            chunk_rounds=2, codec=codec)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, 2, eval_every=1)
+        jax.block_until_ready(final)
+        name = f"bench_smoke_codec_{codec}"
+        assert np.isfinite(hist["loss"]).all(), f"{name}: non-finite loss"
+        for key in ("bytes_up", "bytes_down"):
+            assert len(hist[key]) == 2, f"{name}: missing {key}"
+            assert all(b > 0 for b in hist[key]), \
+                f"{name}: non-positive {key}"
+        rows.append({"name": name, "wall_s": time.time() - t0,
+                     "rounds": 2, "backend": jax.default_backend(),
+                     "final_loss": float(hist["loss"][-1]),
+                     "bytes_up": hist["bytes_up"],
+                     "bytes_down": hist["bytes_down"]})
     # sharded smoke: with a multi-device host (CI runs this job under
     # the 8-way forced-host flag) one full-mesh feddane run exercises
     # the shard_map round + psum aggregation end to end; asserted

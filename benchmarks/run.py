@@ -40,7 +40,9 @@ def smoke(out_path: str) -> None:
                     if r["name"].startswith("bench_smoke_sharded_")]
     buffered_rows = [r for r in rows
                      if r["name"].startswith("bench_smoke_buffered_")]
-    special = scenario_rows + sharded_rows + buffered_rows
+    codec_rows = [r for r in rows
+                  if r["name"].startswith("bench_smoke_codec_")]
+    special = scenario_rows + sharded_rows + buffered_rows + codec_rows
     algos = sorted({r["name"].replace("bench_smoke_", "")
                     .rsplit("_", 1)[0] for r in rows
                     if r not in special})
@@ -48,7 +50,8 @@ def smoke(out_path: str) -> None:
           f"algos={len(algos)}({'+'.join(algos)}) "
           f"scenario_runs={len(scenario_rows)} "
           f"sharded_runs={len(sharded_rows)} "
-          f"buffered_runs={len(buffered_rows)} runs={len(rows)} "
+          f"buffered_runs={len(buffered_rows)} "
+          f"codec_runs={len(codec_rows)} runs={len(rows)} "
           f"rounds={rows[0]['rounds']} "
           f"backend={rows[0]['backend']} out={out_path} ok")
 

@@ -270,6 +270,19 @@ class FederatedConfig:
     straggler_deadline: float = 2.0  # server timeout, in nominal rounds
     dropout_rate: float = 0.1        # P(mid-round dropout) per device
     partial_min_work: float = 0.5    # slowest device's work fraction
+    # client→server wire codec (core/codecs.py): any registered
+    # CodecSpec name.  "none" (dense float32) is structurally a no-op —
+    # every path keeps its exact pre-codec code, bit-identical numerics
+    # (tests/test_codecs.py pins this against tests/golden/).  Every
+    # run's history reports honest bytes_up/bytes_down per round from
+    # the codec's encoded widths either way.
+    codec: str = "none"
+    # -- codec knobs (consumed by whichever spec declares the
+    #    corresponding stage; inert otherwise) --
+    bits: int = 8                    # int8 codec: quantizer bit width
+    topk_frac: float = 0.1           # topk codec: fraction of coords kept
+    clip_norm: float = 1.0           # dp_gauss: per-client l2 clip
+    noise_mult: float = 1.0          # dp_gauss: sigma = mult*clip/count
 
     def __post_init__(self):
         # Registry-backed validation: the algorithm-strategy and
@@ -277,12 +290,26 @@ class FederatedConfig:
         # (imported lazily — configs is a leaf layer).  engine /
         # round_driver stay late-validated by the trainer, which owns
         # their backend-dependent resolution.
+        from repro.core.codecs import codec_spec
         from repro.core.scenarios import scenario_spec
         from repro.core.strategies import (algorithm_spec,
                                            validate_server_opt)
         algorithm_spec(self.algorithm)
         validate_server_opt(self.server_opt)
         scenario_spec(self.scenario)
+        codec_spec(self.codec)
+        if not (isinstance(self.bits, int)
+                and not isinstance(self.bits, bool)
+                and 2 <= self.bits <= 8):
+            raise ValueError(
+                f"bits must be an int in [2, 8], got {self.bits!r}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(
+                f"topk_frac must be in (0, 1], got {self.topk_frac}")
+        if self.clip_norm <= 0.0 or self.noise_mult < 0.0:
+            raise ValueError(
+                f"clip_norm must be > 0 and noise_mult >= 0, got "
+                f"{self.clip_norm}/{self.noise_mult}")
         if not 0.0 < self.avail_prob <= 1.0:
             raise ValueError(
                 f"avail_prob must be in (0, 1], got {self.avail_prob}")
@@ -333,3 +360,18 @@ class FederatedConfig:
             raise ValueError(
                 f"mesh_devices must be a positive int or 'auto', got "
                 f"{self.mesh_devices!r}")
+
+
+def one_shot_config(num_devices: int, *, local_epochs: int = 50,
+                    **overrides) -> FederatedConfig:
+    """The one-shot federation preset (EconML federate_aggregate style):
+    every device trains a fully local model to convergence and the
+    server aggregates exactly ONCE — run the returned config for
+    ``num_rounds=1``.  Total communication is a single full-
+    participation round, the extreme point of the comm-frugality axis
+    (reported as such by ``benchmarks/comm_grid.py``).
+    """
+    kw = dict(algorithm="one_shot", num_devices=num_devices,
+              devices_per_round=num_devices, local_epochs=local_epochs)
+    kw.update(overrides)
+    return FederatedConfig(**kw)

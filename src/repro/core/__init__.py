@@ -6,6 +6,8 @@ from repro.core.client import (LocalResult, gamma_inexactness,
                                make_batched_grad_fn, make_batched_solver,
                                make_exact_solver, make_grad_fn,
                                make_local_solver)
+from repro.core.codecs import (CodecSpec, available_codecs, codec_spec,
+                               register_codec)
 from repro.core.engine import RoundEngine, ScannedDriver, make_scanned_run
 from repro.core.scenarios import (ScenarioSpec, available_scenarios,
                                   register_scenario, scenario_spec)
@@ -24,6 +26,7 @@ __all__ = [
     "available_algorithms",
     "ScenarioSpec", "register_scenario", "scenario_spec",
     "available_scenarios",
+    "CodecSpec", "register_codec", "codec_spec", "available_codecs",
     "DEVICE_AXIS", "make_device_mesh", "mesh_for",
     "resolve_mesh_devices",
     "make_local_solver", "make_grad_fn", "make_exact_solver",

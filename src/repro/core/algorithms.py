@@ -75,6 +75,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import FederatedConfig
+from repro.core import codecs
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core import sharding
@@ -109,6 +110,7 @@ class FederatedState:
     c_server: Any = None                  # SCAFFOLD server c
     center: Any = None                    # S-DANE auxiliary prox center v^t
     opt_state: Any = None                 # server-optimizer state
+    ef: Optional[List[Any]] = None        # codec per-device error feedback
 
 
 class FederatedTrainer:
@@ -146,9 +148,19 @@ class FederatedTrainer:
         self.scn = scenario_spec(cfg.scenario)
         self._scn_trivial = is_trivial(self.scn)
         self._env_channels = env_channels(self.scn)
+        # client→server wire codec (core/codecs): the trivial "none"
+        # spec keeps every aggregation path below exactly pre-codec
+        # (no packing, no codec rng — bit-identical numerics); byte
+        # telemetry is computed host-side either way
+        self.codec = codecs.codec_spec(cfg.codec)
+        self._codec_trivial = codecs.is_trivial(self.codec)
         #: (intended K, effective K) of the most recent round — the
         #: participation telemetry ``run()`` folds into its history
         self.last_env: Optional[Tuple[int, float]] = None
+        #: (phase-A gather devices that responded, solve devices whose
+        #: update arrived) of the most recent round — what the honest
+        #: per-round byte accounting (codecs.round_bytes) consumes
+        self.last_comm: Optional[Tuple[float, float]] = None
         self.rng = np.random.default_rng(cfg.seed)
         self.solver = make_local_solver(
             loss_fn, learning_rate=cfg.learning_rate,
@@ -162,6 +174,14 @@ class FederatedTrainer:
         # know it.  mesh_devices=1 (default) -> None -> every program
         # below stays structurally pre-mesh.
         self.mesh = sharding.mesh_for(cfg)
+        if not self._codec_trivial and self.mesh is not None:
+            # the fused decode+aggregate kernel reduces the whole cohort
+            # in one launch; a sharded cohort would need split
+            # numerator/denominator psums around it — not wired up yet
+            raise ValueError(
+                "codec != 'none' does not compose with mesh_devices > 1 "
+                "yet (the fused decode+aggregate is a single-launch "
+                "cohort reduction); set codec='none' or mesh_devices=1")
         engine = cfg.engine
         if engine == "auto":
             # a requested mesh implies the batched SPMD round even on
@@ -254,6 +274,11 @@ class FederatedTrainer:
         st.c_server = aux.get("c_server")
         st.center = aux.get("center")
         st.opt_state = aux.get("opt")
+        if self.codec.error_feedback:
+            from repro.kernels.flatpack import flat_spec
+            st.ef = codecs.init_ef(self.codec, flat_spec(params),
+                                   self.dataset.num_devices,
+                                   stacked=False)
         return st
 
     # -- state <-> engine-aux plumbing ------------------------------------
@@ -350,6 +375,16 @@ class FederatedTrainer:
             self.last_env = (len(S2), float(np.asarray(active).sum()))
         else:
             self.last_env = (len(S2), float(len(S2)))
+        # wire accounting: phase-A gradients cost bytes only for the
+        # devices that actually responded — under availability scenarios
+        # the thinned gather (availability_mask) is the honest count,
+        # NOT the selection width
+        if spec.grad_source == "fresh":
+            gather_n = (float(len(S1)) if active_a is None
+                        else float(np.asarray(active_a).sum()))
+        else:
+            gather_n = 0.0
+        self.last_comm = (gather_n, self.last_env[1])
 
         if eng is not None:
             b, v = self._stack(S2)
@@ -357,6 +392,11 @@ class FederatedTrainer:
                        if spec.grad_source == "fresh" and not shared
                        else None)
             aux = self._gather_aux(st, S2)
+            if not self._codec_trivial:
+                aux["codec_key"] = codecs.round_key(cfg, st.round)
+                if self.codec.error_feedback:
+                    aux["ef"] = jax.numpy.stack(
+                        [st.ef[int(k)] for k in S2])
             if active is None:
                 st.params, aux_new = eng.round(w0, aux, phase_a, b, v,
                                                decay)
@@ -365,6 +405,9 @@ class FederatedTrainer:
                     w0, aux, phase_a, b, v, decay, active, work,
                     active_a)
             self._scatter_aux(st, aux_new, S2)
+            if not self._codec_trivial and self.codec.error_feedback:
+                for i, k in enumerate(S2):
+                    st.ef[int(k)] = aux_new["ef"][i]
         else:
             self._loop_round(st, S1, S2, mu, decay,
                              active=(None if active is None
@@ -422,7 +465,7 @@ class FederatedTrainer:
             g_global = st.g_prev
 
         c0 = st.c_server
-        updates, fresh_grads, deltas = [], [], []
+        updates, upd_ids, fresh_grads, deltas = [], [], [], []
         for i, k in enumerate(S2):
             if active is not None and not active[i]:
                 continue
@@ -448,6 +491,7 @@ class FederatedTrainer:
             else:
                 res = self.solver(w0, corr, mu, bk)
             updates.append(res.params)
+            upd_ids.append(int(k))
             if spec.control_update is not None:
                 # Karimireddy et al. option II: corrections used the
                 # ROUND-START server control; each duplicate selection
@@ -460,7 +504,10 @@ class FederatedTrainer:
                 deltas.append(pt.sub(ck_new, st.controls[int(k)]))
                 st.controls[int(k)] = ck_new
 
-        w_agg = server.aggregate_mean(updates) if updates else w0
+        if self._codec_trivial or not updates:
+            w_agg = server.aggregate_mean(updates) if updates else w0
+        else:
+            w_agg = self._codec_aggregate(st, w0, updates, upd_ids)
         if spec.control_update is not None and deltas:
             # c_server absorbs the (1/N)-scaled correction deltas once,
             # after the loop.
@@ -473,6 +520,44 @@ class FederatedTrainer:
             w0, w_agg, self._server_opt, st.opt_state)
         if spec.center_update is not None:
             st.center = spec.center_update(st.center, st.params, cfg)
+
+    def _codec_aggregate(self, st: FederatedState, w0, updates, ids):
+        """The wire-protocol stage of the reference path: each active
+        client's update delta (pseudo-gradient ``w0 - w_k``) is flat-
+        packed, encoded by the codec spec (consuming/refreshing the
+        client's persistent error feedback), and the server recovers
+        the aggregate through the fused dequantize+masked-mean kernel
+        plus the spec's decode tail — the same program shape as the
+        batched engine, so cross-path parity holds for lossy codecs
+        too (per-client draws are keyed by cohort slot on both paths).
+        """
+        from repro.kernels.codec import codec_aggregate
+        from repro.kernels.flatpack import (flat_spec, pack_broadcast,
+                                            pack_stacked, unpack)
+        codec, cfg = self.codec, self.cfg
+        jnp = jax.numpy
+        k = len(updates)
+        fspec = flat_spec(w0)
+        stack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                       *updates)
+        deltas = (pack_broadcast(fspec, w0, k)
+                  - pack_stacked(fspec, stack, k)) \
+            .reshape(k, fspec.rows, -1)
+        key = codecs.round_key(cfg, st.round)
+        efs = (jnp.stack([st.ef[i] for i in ids])
+               if codec.error_feedback else None)
+        vals, scales, ef_new = codecs.encode_stacked(
+            codec, cfg, key, deltas, efs)
+        agg = codec_aggregate(vals, scales, jnp.ones((k,), jnp.float32),
+                              interpret=jax.default_backend() == "cpu")
+        agg = codecs.decode_aggregate(codec, cfg, key, agg, k)
+        if ef_new is not None:
+            # sequential writeback: a device selected twice (with
+            # replacement) keeps the last encode's residual, like the
+            # batched scatter
+            for i, dev in enumerate(ids):
+                st.ef[dev] = ef_new[i]
+        return pt.sub(w0, unpack(fspec, agg))
 
     # -- evaluation -------------------------------------------------------
 
@@ -502,7 +587,10 @@ class FederatedTrainer:
         ``loss`` at eval cadence, plus per-round participation telemetry
         ``intended_k`` / ``effective_k`` / ``dropped`` (the scenario
         layer's realized environment; under ``scenario="ideal"`` these
-        are constants K / K / 0).
+        are constants K / K / 0) and per-round wire telemetry
+        ``bytes_up`` / ``bytes_down`` (honest byte counts from the
+        codec's encoded widths and the round's realized participation —
+        see ``codecs.round_bytes``).
 
         ``checkpoint_dir``: if set, ``{"params", "round"}`` is saved via
         checkpoint/store.py at every ``cfg.chunk_rounds`` boundary (both
@@ -548,9 +636,12 @@ class FederatedTrainer:
         chunk = self.cfg.chunk_rounds if self.cfg.chunk_rounds > 0 \
             else num_rounds
         st = self.init(params)
+        n_elems = sum(int(np.prod(x.shape))
+                      for x in jax.tree_util.tree_leaves(params))
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
                                         "loss": [], "intended_k": [],
-                                        "effective_k": [], "dropped": []}
+                                        "effective_k": [], "dropped": [],
+                                        "bytes_up": [], "bytes_down": []}
         try:
             for t in range(num_rounds):
                 st = self.round(st)
@@ -558,6 +649,11 @@ class FederatedTrainer:
                 hist["intended_k"].append(float(intended))
                 hist["effective_k"].append(eff)
                 hist["dropped"].append(float(intended) - eff)
+                up, down = codecs.round_bytes(
+                    self.spec, self.codec, self.cfg, n_elems,
+                    *self.last_comm)
+                hist["bytes_up"].append(up)
+                hist["bytes_down"].append(down)
                 if t % eval_every == 0 or t == num_rounds - 1:
                     loss = self.global_loss(st.params)
                     hist["round"].append(st.round)

@@ -72,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FederatedConfig
+from repro.core import codecs
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core.client import make_batched_grad_fn, make_batched_solver
@@ -80,6 +81,8 @@ from repro.core.scenarios import (env_channels, is_trivial,
 from repro.core.strategies import (ControlCtx, CorrCtx, algorithm_spec,
                                    init_aux, make_server_opt)
 from repro.data.batching import stack_device_batches
+from repro.kernels.flatpack import (LANES, flat_spec, pack,
+                                    pack_broadcast, pack_stacked, unpack)
 
 #: Safety factor on the event budget: a run may process at most
 #: ``HORIZON_FACTOR * num_rounds * max(K, M)`` arrivals before the
@@ -187,6 +190,14 @@ class BufferedDriver(object):
         else:
             self._pool = min(cfg.devices_per_round, n)
         self._m = cfg.buffer_size or self._pool
+        # client→server wire codec (core/codecs): encode happens at
+        # cohort LAUNCH (client semantics — the error-feedback state
+        # updates when the client transmits), the flight then carries
+        # its DECODED per-client delta so the staging/commit machinery
+        # below is untouched; server-side post-aggregate transforms
+        # (dp_gauss noise) run inside the jitted commit program.
+        self._codec = codecs.codec_spec(cfg.codec)
+        self._codec_trivial = codecs.is_trivial(self._codec)
         self.rng = np.random.default_rng(cfg.seed)
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
@@ -204,13 +215,31 @@ class BufferedDriver(object):
 
     def _make_commit(self):
         """The jitted commit program: staleness-weighted buffer reduce +
-        server (optimizer) step, one dispatch per commit."""
+        server (optimizer) step, one dispatch per commit.  Codecs with a
+        server-side post-aggregate transform (dp_gauss noise) get a
+        variant taking the commit's codec key and effective count; the
+        trivial codec keeps the exact pre-codec program."""
         opt = self._server_opt
+        codec, cfg = self._codec, self.cfg
+        self._commit_takes_key = (not self._codec_trivial
+                                  and codec.post_aggregate is not None)
 
-        @jax.jit
-        def commit(w, opt_state, buf, weights):
-            pg = server.aggregate_buffered(buf, weights)
-            return server.server_step(w, pt.sub(w, pg), opt, opt_state)
+        if self._commit_takes_key:
+            @jax.jit
+            def commit(w, opt_state, buf, weights, key, count):
+                pg = server.aggregate_buffered(buf, weights)
+                fspec = flat_spec(w)
+                flat = codec.post_aggregate(
+                    cfg, key, pack(fspec, pg), jnp.maximum(count, 1.0))
+                pg = unpack(fspec, flat)
+                return server.server_step(w, pt.sub(w, pg), opt,
+                                          opt_state)
+        else:
+            @jax.jit
+            def commit(w, opt_state, buf, weights):
+                pg = server.aggregate_buffered(buf, weights)
+                return server.server_step(w, pt.sub(w, pg), opt,
+                                          opt_state)
 
         return commit
 
@@ -293,6 +322,7 @@ class BufferedDriver(object):
 
         # phase A: the gradient gather, against THIS launch's anchor
         g_global = None
+        gather_n = 0.0
         if spec.grad_source == "fresh":
             gather = np.asarray(s1 if s1 is not None else cohort)
             if self.scn.availability is not None and uniforms is not None:
@@ -300,6 +330,7 @@ class BufferedDriver(object):
                     cfg, self.dataset.num_devices, version))
                 av = np.asarray(uniforms["avail"])[gather] < p[gather]
                 gather = gather[av]
+            gather_n = float(len(gather))
             if len(gather) > 0:
                 gb, gv = stack_device_batches(self.dataset, gather)
                 g_stack = self._grads(w, gb, gv)
@@ -344,6 +375,45 @@ class BufferedDriver(object):
                 w_new=res.params, inv_steps=inv_steps))
             c_delta = pt.sub(c_new, c_stack)
 
+        # codec encode, client-side at launch: the flight carries the
+        # DECODED delta (per-client post_decode is valid by the spec's
+        # linearity contract) so staging/commit stay codec-blind; the
+        # error-feedback accumulator refreshes only for deliveries that
+        # will actually cross the wire.
+        dec = None
+        if not self._codec_trivial:
+            codec = self._codec
+            fspec = flat_spec(w)
+            key = codecs.round_key(cfg, version)
+            deltas = (pack_broadcast(fspec, w, m)
+                      - pack_stacked(fspec, res.params, m)
+                      ).reshape(m, fspec.rows, LANES)
+            efs = None
+            if codec.error_feedback:
+                zero = jnp.zeros((fspec.rows, LANES), jnp.float32)
+                efs = jnp.stack([aux["ef"].get(int(k), zero)
+                                 for k in cohort])
+            vals, scales, ef_new = codecs.encode_stacked(
+                codec, cfg, key, deltas, efs)
+            dec = vals * scales[:, None, None]
+            if codec.post_decode is not None:
+                dec = jax.vmap(
+                    lambda x: codec.post_decode(cfg, key, x))(dec)
+            if ef_new is not None:
+                for i, k in enumerate(cohort):
+                    if delivered[i]:
+                        aux["ef"][int(k)] = ef_new[i]
+
+        # wire bytes at launch: anchor (+ correction) broadcast to the
+        # cohort, anchor broadcast to and dense gradients back from the
+        # THINNED gather responders.  The encoded update uplink accrues
+        # at arrival in run()'s event loop.
+        dense = codecs.DENSE_BYTES * self._n_elems
+        corr_down = 1.0 if spec.correction is not None else 0.0
+        self._bytes_down += dense * gather_n + dense * (1.0
+                                                        + corr_down) * m
+        self._bytes_up += dense * gather_n
+
         flights = []
         for i, k in enumerate(cohort):
             row = jax.tree_util.tree_map(lambda x, i=i: x[i], res.params)
@@ -351,7 +421,8 @@ class BufferedDriver(object):
                 done=now + float(latency[i]), seq=seq0 + i,
                 client=int(k), anchor_version=version, launch=now,
                 delivered=bool(delivered[i]),
-                delta=pt.sub(w, row),
+                delta=(pt.sub(w, row) if dec is None
+                       else unpack(fspec, dec[i])),
                 g_local=(jax.tree_util.tree_map(
                     lambda x, i=i: x[i], g_local)
                     if spec.updates_g_prev else None),
@@ -398,7 +469,17 @@ class BufferedDriver(object):
             spec, cfg, params, self.dataset.num_devices, stacked=False)
         if "controls" in aux:
             aux["controls"] = {}          # sparse: zeros until first commit
+        if self._codec.error_feedback:
+            aux["ef"] = {}                # sparse: zeros until first launch
         opt_state = aux.get("opt")
+        self._n_elems = sum(
+            int(np.prod(np.asarray(x.shape)))
+            for x in jax.tree_util.tree_leaves(params))
+        self._bytes_up = self._bytes_down = 0.0
+        dense = codecs.DENSE_BYTES * self._n_elems
+        enc = (self._codec.uplink_bytes(cfg, self._n_elems)
+               if self._codec.uplink_bytes is not None else dense)
+        grad_up = dense if spec.updates_g_prev else 0.0
         buffer = _CommitBuffer(params, self._m)
         pending: List[_Flight] = []       # metadata of staged updates
         inflight: List[_Flight] = []      # heap by (done, seq)
@@ -412,7 +493,8 @@ class BufferedDriver(object):
             "round": [], "comm_rounds": [], "loss": [],
             "intended_k": [], "effective_k": [], "dropped": [],
             "staleness_mean": [], "staleness_max": [],
-            "buffer_wait": [], "anchor_age": [], "sim_time": []}
+            "buffer_wait": [], "anchor_age": [], "sim_time": [],
+            "bytes_up": [], "bytes_down": []}
         chunk = cfg.chunk_rounds if cfg.chunk_rounds > 0 else num_rounds
 
         def launch(cohort_hint: Optional[List[int]] = None) -> None:
@@ -439,8 +521,14 @@ class BufferedDriver(object):
                 [version - f.anchor_version for f in pending], np.float32)
             weights = server.staleness_weight(cfg.staleness_fn,
                                               jnp.asarray(stal))
-            w, opt_state = self._commit_fn(w, opt_state, buffer.swap(),
-                                           weights)
+            if self._commit_takes_key:
+                w, opt_state = self._commit_fn(
+                    w, opt_state, buffer.swap(), weights,
+                    codecs.round_key(cfg, version),
+                    jnp.float32(len(pending)))
+            else:
+                w, opt_state = self._commit_fn(w, opt_state,
+                                               buffer.swap(), weights)
             if spec.updates_g_prev:
                 aux["g_prev"] = self._gref(
                     jax.tree_util.tree_map(
@@ -468,6 +556,9 @@ class BufferedDriver(object):
             hist["anchor_age"].append(
                 float(np.mean([now - f.launch for f in pending])))
             hist["sim_time"].append(now)
+            hist["bytes_up"].append(self._bytes_up)
+            hist["bytes_down"].append(self._bytes_down)
+            self._bytes_up = self._bytes_down = 0.0
             pending.clear()
             consumed = 0
             if (version - 1) % eval_every == 0 or version == num_rounds:
@@ -499,6 +590,10 @@ class BufferedDriver(object):
                 consumed += 1
                 f.arrival = now
                 stale = version - f.anchor_version
+                if f.delivered:
+                    # the encoded update crossed the wire — staleness-
+                    # dropped arrivals still spent the uplink bytes
+                    self._bytes_up += enc + grad_up
                 if not f.delivered or (cfg.max_staleness > 0
                                        and stale > cfg.max_staleness):
                     continue

@@ -1,0 +1,27 @@
+"""Declarative client→server wire-protocol codecs: specs + registry.
+
+One :class:`CodecSpec` per wire format (see ``builtin.py`` for the
+built-ins — none, int8, topk, dp_gauss); the host loop, batched round
+engine, scanned driver, and buffered async driver are generic
+interpreters of the spec, exactly like ``core/strategies`` for
+algorithms and ``core/scenarios`` for environments.  Register a new
+spec and every execution path — and ``FederatedConfig.codec``
+validation, byte telemetry, and the comm-grid benchmark — picks it up
+immediately.
+"""
+from repro.core.codecs.spec import (DENSE_BYTES, CodecSpec,
+                                    available_codecs, codec_spec,
+                                    decode_aggregate, encode_stacked,
+                                    init_ef, is_trivial, register_codec,
+                                    round_bytes, round_key, topk_keep,
+                                    unregister_codec)
+from repro.core.codecs import builtin  # noqa: F401  (registers specs)
+
+__all__ = [
+    "CodecSpec",
+    "register_codec", "unregister_codec", "codec_spec",
+    "available_codecs", "is_trivial",
+    "encode_stacked", "decode_aggregate", "init_ef",
+    "round_key", "round_bytes", "topk_keep",
+    "DENSE_BYTES",
+]

@@ -1,0 +1,168 @@
+"""The built-in wire codecs: none / int8 / topk / dp_gauss.
+
+Every codec is pure spec data interpreted by the generic driver hooks
+in ``spec.py`` — adding one here (or from user code via
+``register_codec``) requires zero trainer/engine/driver changes.
+
+Lossy-codec quality contract (pinned by tests/test_codecs.py and the
+``benchmarks/comm_grid.py`` frontier): on the synthetic logistic task,
+``int8`` (unbiased stochastic quantization) and ``topk`` (biased but
+error-compensated) track the dense final loss to a few percent over a
+short horizon, while ``dp_gauss`` trades loss for privacy in proportion
+to ``noise_mult`` — the point of the comm grid is to *measure* those
+trade-offs per algorithm, not to hide them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codecs.spec import (CodecSpec, DENSE_BYTES, register_codec,
+                                    topk_keep)
+from repro.kernels.flatpack import LANES
+
+# -- none: the identity wire format -----------------------------------------
+
+NONE = register_codec(CodecSpec(
+    name="none",
+    summary="dense float32 pytrees — the identity wire format (structural "
+            "no-op: every path keeps its exact pre-codec program)",
+))
+
+
+# -- int8: stochastic uniform quantization + random rotation ----------------
+#
+# Suresh et al. (1611.00429): a shared random rotation flattens the
+# coordinate distribution before uniform quantization, shrinking the
+# dynamic range the (per-client, per-tensor) scale must cover.  We use
+# the classic cheap orthonormal choice H·D — a random diagonal of
+# Rademacher signs followed by a Hadamard transform — applied along the
+# 128-lane axis of the flat-packed buffer (128 is a power of two, so
+# the Sylvester construction applies and the transform is exact).
+# Rounding is stochastic (floor(x/s + u)) so the quantizer is unbiased:
+# E[decode(encode(x))] = x, which is what lets the masked-mean
+# aggregate stay an unbiased estimate of the dense mean.
+
+def _hadamard(n: int) -> np.ndarray:
+    h = np.array([[1.0]], np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+_H128 = _hadamard(LANES)
+
+
+def _signs(key):
+    return jax.random.rademacher(
+        jax.random.fold_in(key, 0x5167), (LANES,), dtype=jnp.float32)
+
+
+def _rotate(key, x):
+    """Shared orthonormal preconditioner: x -> (x * D) @ H, per row."""
+    return (x * _signs(key)) @ jnp.asarray(_H128)
+
+
+def _derotate(key, x):
+    """Inverse rotation (H is symmetric orthonormal: H^-1 = H)."""
+    return (x @ jnp.asarray(_H128)) * _signs(key)
+
+
+def _int8_encode(cfg, key, idx, flat, ef):
+    del ef
+    levels = float(2 ** (cfg.bits - 1) - 1)
+    y = _rotate(key, flat)
+    scale = jnp.maximum(jnp.max(jnp.abs(y)) / levels, 1e-12)
+    u = jax.random.uniform(jax.random.fold_in(key, idx), flat.shape)
+    q = jnp.clip(jnp.floor(y / scale + u), -levels, levels)
+    return q, scale, None
+
+
+def _int8_bytes(cfg, n: int) -> float:
+    # one b-bit code per coordinate + the float32 scale
+    return n * cfg.bits / 8.0 + DENSE_BYTES
+
+
+INT8 = register_codec(CodecSpec(
+    name="int8",
+    summary="stochastic uniform quantization at cfg.bits (default 8) with "
+            "shared random-rotation preconditioning (1611.00429)",
+    encode=_int8_encode,
+    post_decode=lambda cfg, key, agg: _derotate(key, agg),
+    uplink_bytes=_int8_bytes,
+    uses_rng=True,
+))
+
+
+# -- topk: magnitude sparsification with persistent error feedback ----------
+#
+# Each round the client transmits only the ceil(topk_frac * n) largest-
+# magnitude coordinates of (delta + residual) and banks the rest in its
+# persistent error-feedback buffer (Stich et al., 1809.07599) — the
+# residual rides every future round until it clears the threshold, so
+# transmitted + residual telescopes to the exact uncompressed signal
+# (pinned by tests/test_codecs.py).  Kept values are rounded through
+# float16 because that is the wire format the byte accounting assumes:
+# one (fp16 value, uint16 delta-index) pair per kept coordinate.  Ties
+# at the threshold may keep a few extra coordinates (documented slack —
+# the byte model charges the analytic k).  Flat-pack padding lanes are
+# zero and zeros never beat a positive threshold, so padding is never
+# transmitted.
+
+def _topk_encode(cfg, key, idx, flat, ef):
+    del key, idx
+    x = flat + ef
+    k = topk_keep(cfg, x.size)
+    thresh = jax.lax.top_k(jnp.abs(x).ravel(), k)[0][-1]
+    keep = (jnp.abs(x) >= jnp.maximum(thresh, 1e-30)).astype(jnp.float32)
+    vals = (x * keep).astype(jnp.float16).astype(jnp.float32)
+    return vals, jnp.float32(1.0), x - vals
+
+
+def _topk_bytes(cfg, n: int) -> float:
+    # (fp16 value + uint16 delta-index) per kept coordinate + the count
+    return topk_keep(cfg, n) * 4.0 + DENSE_BYTES
+
+
+TOPK = register_codec(CodecSpec(
+    name="topk",
+    summary="top-k magnitude sparsification (cfg.topk_frac) with "
+            "persistent per-client error feedback (1809.07599)",
+    encode=_topk_encode,
+    uplink_bytes=_topk_bytes,
+    error_feedback=True,
+))
+
+
+# -- dp_gauss: l2 clip + server-side Gaussian noise -------------------------
+#
+# The Gaussian-mechanism shape of DP-FedAvg (1710.06963): each client
+# clips its update to l2 norm cfg.clip_norm (bounding per-client
+# sensitivity of the cohort MEAN at clip_norm / count), the server adds
+# isotropic Gaussian noise with sigma = noise_mult * clip_norm / count
+# to the aggregate.  Bytes are dense — this codec buys privacy, not
+# bandwidth — which is exactly why it composes with int8/topk on the
+# frontier plot rather than replacing them.
+
+def _dp_encode(cfg, key, idx, flat, ef):
+    del key, idx, ef
+    nrm = jnp.sqrt(jnp.sum(flat * flat))
+    fac = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(nrm, 1e-12))
+    return flat * fac, jnp.float32(1.0), None
+
+
+def _dp_post(cfg, key, agg, count):
+    sigma = cfg.noise_mult * cfg.clip_norm / count
+    noise = jax.random.normal(jax.random.fold_in(key, 0x0D99), agg.shape)
+    return agg + sigma * noise
+
+
+DP_GAUSS = register_codec(CodecSpec(
+    name="dp_gauss",
+    summary="per-client l2 clip (cfg.clip_norm) + server-side Gaussian "
+            "noise (cfg.noise_mult) on the aggregate (1710.06963)",
+    encode=_dp_encode,
+    post_aggregate=_dp_post,
+    uses_rng=True,
+))

@@ -1,0 +1,281 @@
+"""Declarative client→server wire-protocol codecs + registry.
+
+The repo counts ``comm_per_round`` but, until this layer, every client
+update crossed the client→server boundary as a full dense float32
+pytree.  A :class:`CodecSpec` models the wire format declaratively —
+how a client *encodes* its update delta, how the server *decodes and
+aggregates* the cohort, and how many bytes the encoding actually puts
+on the wire — and the four execution paths (``FederatedTrainer`` host
+loop, ``RoundEngine`` batched round, ``ScannedDriver`` scan body,
+``BufferedDriver`` event queue) are generic interpreters of it, exactly
+mirroring the ``AlgorithmSpec`` and ``ScenarioSpec`` registries.
+
+Wire model
+----------
+Codecs operate on the *flat-packed* update delta: the client's
+pseudo-gradient ``w0 - w_k`` packed into the PR-6 ``(rows, 128)``
+lane-aligned buffer (``kernels/flatpack.py``).  That buys three things:
+one codec definition covers every model pytree, the hot decode+
+aggregate path is a single fused Pallas launch over the stacked
+``(K, rows, 128)`` cohort buffer (``kernels/codec.py``), and per-client
+persistent codec state (error feedback) is a single dense array handled
+exactly like SCAFFOLD controls in carries and sparse writebacks.
+
+The contract, per selected client ``i`` with flat delta ``x_i``::
+
+    vals_i, scale_i, ef_i' = encode(cfg, key, i, x_i, ef_i)
+    agg   = sum_k m_k * scale_k * vals_k / max(sum_k m_k, 1)   # fused
+    agg   = post_decode(cfg, key, agg)          # linear inverse, if any
+    agg   = post_aggregate(cfg, key, agg, n)    # server-side, if any
+
+``vals`` stays float32 even for quantizing codecs (*simulated*
+quantization: the values are exactly the representable code points, the
+byte cost is reported by :attr:`CodecSpec.uplink_bytes`) so carries keep
+uniform dtypes across codecs.  ``post_decode`` must be LINEAR in the
+signal — the buffered driver decodes per client before staging, the
+batched paths decode once after the masked mean; linearity is what
+makes those orders equivalent.  ``post_aggregate`` is a server-side
+transform of the aggregate itself (DP noise) and runs exactly once per
+commit on every path.
+
+Randomness contract
+-------------------
+Codecs never hold RNG state: each round every path derives the SAME
+domain-separated key via :func:`round_key` (host loop and batched round
+from the python round index, scan body from the traced round index), and
+per-client draws fold in the cohort slot.  Shared-randomness transforms
+(the int8 random rotation) use the round key directly so client encode
+and server decode agree without a handshake.
+
+``codec="none"`` (``encode is None``) is *structurally* trivial:
+:func:`is_trivial` lets every path keep its exact pre-codec program —
+no packing, no extra RNG draws, no new carry entries — so default runs
+stay bit-identical to a build without the codec layer (pinned by
+tests/test_codecs.py against tests/golden/).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Bytes of one dense float32 scalar — the baseline wire width.
+DENSE_BYTES = 4.0
+
+
+@dataclass(frozen=True)
+class CodecSpec:
+    """One client→server wire format, declaratively.
+
+    Encode (client side)
+      - ``encode(cfg, key, idx, flat, ef) -> (vals, scale, ef_new)``:
+        ``flat`` is the client's ``(rows, 128)`` flat-packed update
+        delta, ``idx`` its cohort slot (python int or traced scalar —
+        fold it into ``key`` for independent per-client draws), ``ef``
+        its persistent error-feedback buffer (``None`` unless
+        ``error_feedback``).  Returns the transmitted values (float32,
+        same shape), a scalar dequantization scale (1.0 when unused)
+        and the new error-feedback buffer (``None`` when stateless).
+        ``None`` encode = the identity codec (see :func:`is_trivial`).
+
+    Decode (server side)
+      - ``post_decode(cfg, key, agg) -> agg``: linear inverse transform
+        applied to the (already scale-multiplied) signal — e.g. undoing
+        a shared random rotation.  MUST be linear (see module docs).
+      - ``post_aggregate(cfg, key, agg, count) -> agg``: server-side
+        transform of the cohort aggregate (e.g. DP Gaussian noise,
+        calibrated by the contributing-client ``count``).  Runs once
+        per commit; never runs on an empty cohort.
+
+    Wire accounting
+      - ``uplink_bytes(cfg, n) -> float``: bytes one client puts on the
+        wire to ship ``n`` real (unpadded) parameters.  ``None`` =
+        dense float32 (``4 * n``).
+
+    State / RNG flags
+      - ``error_feedback``: the codec keeps a persistent per-client
+        residual buffer, threaded through every path like SCAFFOLD
+        controls.
+      - ``uses_rng``: encode (or a post stage) consumes the round key —
+        purely documentary, but checked for consistency.
+    """
+    name: str
+    summary: str
+    encode: Optional[Callable[..., Any]] = None
+    post_decode: Optional[Callable[..., Any]] = None
+    post_aggregate: Optional[Callable[..., Any]] = None
+    uplink_bytes: Optional[Callable[[Any, int], float]] = None
+    error_feedback: bool = False
+    uses_rng: bool = False
+
+
+def is_trivial(spec: CodecSpec) -> bool:
+    """True when the codec is the identity wire format: every path may
+    (and does) take its exact pre-codec code."""
+    return spec.encode is None
+
+
+_REGISTRY: Dict[str, CodecSpec] = {}
+
+
+def _check_codec(spec: CodecSpec) -> None:
+    """Completeness check at registration, mirroring scenarios._check_scenario."""
+    def bad(msg):
+        raise ValueError(f"CodecSpec {spec.name!r}: {msg}")
+
+    if not spec.name or not spec.name.isidentifier():
+        bad(f"name must be a non-empty identifier, got {spec.name!r}")
+    if spec.encode is None:
+        for field in ("post_decode", "post_aggregate", "uplink_bytes"):
+            if getattr(spec, field) is not None:
+                bad(f"{field} is meaningless without encode; a trivial "
+                    f"codec must be the full identity")
+        if spec.error_feedback or spec.uses_rng:
+            bad("error_feedback/uses_rng are meaningless without encode")
+
+
+def register_codec(spec: CodecSpec, *, override: bool = False) -> CodecSpec:
+    """Register ``spec`` under ``spec.name``; returns the spec.
+
+    Rejects duplicate names unless ``override=True``; completeness is
+    checked here so a broken registration fails at import time.
+    """
+    _check_codec(spec)
+    if spec.name in _REGISTRY and not override:
+        raise ValueError(
+            f"codec {spec.name!r} is already registered; pass "
+            f"override=True to replace it")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_codec(name: str) -> None:
+    """Remove ``name`` from the registry (test cleanup)."""
+    _REGISTRY.pop(name, None)
+
+
+def available_codecs() -> Tuple[str, ...]:
+    """Sorted names of every registered codec — the single source of
+    truth for what ``FederatedConfig.codec`` accepts."""
+    return tuple(sorted(_REGISTRY))
+
+
+def codec_spec(name: str) -> CodecSpec:
+    """Look up a registered codec; unknown names raise with the full
+    sorted list (the only codec validation in the system)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: "
+            f"{', '.join(available_codecs())}") from None
+
+
+# -- driver-facing helpers (the generic interpreter pieces) -----------------
+
+def round_key(cfg, t):
+    """The shared per-round codec key, domain-separated from the
+    sampling/scenario streams (those derive from ``PRNGKey(cfg.seed)``
+    split chains; this folds the round index into a distinct base key).
+    ``t`` may be a traced scalar under the scanned driver.
+    """
+    base = jax.random.PRNGKey(cfg.seed ^ 0x0DEC)
+    return jax.random.fold_in(base, t)
+
+
+def encode_stacked(spec: CodecSpec, cfg, key, flats, efs):
+    """Vmapped client-side encode over a stacked ``(K, rows, 128)``
+    cohort of flat deltas.  ``efs`` is the matching stacked error-
+    feedback buffer (``None`` unless ``spec.error_feedback``).  Returns
+    ``(vals (K, rows, 128), scales (K,), ef_new)`` with ``ef_new=None``
+    for stateless codecs.  Works under jit (client slots, not device
+    ids, seed the per-client draws — see module docs).
+    """
+    idx = jnp.arange(flats.shape[0])
+    if spec.error_feedback:
+        def one(i, f, e):
+            return spec.encode(cfg, key, i, f, e)
+        vals, scales, ef_new = jax.vmap(one)(idx, flats, efs)
+    else:
+        def one(i, f):
+            v, s, _ = spec.encode(cfg, key, i, f, None)
+            return v, s
+        vals, scales = jax.vmap(one)(idx, flats)
+        ef_new = None
+    return vals, jnp.asarray(scales, jnp.float32), ef_new
+
+
+def decode_aggregate(spec: CodecSpec, cfg, key, agg, count):
+    """Server-side tail of the decode: linear inverse transform, then
+    the aggregate-level transform (guarded so an empty cohort stays a
+    no-op round — no noise is injected into ``w^t = w^{t-1}``).
+    ``count`` may be traced.
+    """
+    if spec.post_decode is not None:
+        agg = spec.post_decode(cfg, key, agg)
+    if spec.post_aggregate is not None:
+        count = jnp.asarray(count, jnp.float32)
+        noisy = spec.post_aggregate(cfg, key, agg,
+                                    jnp.maximum(count, 1.0))
+        agg = jnp.where(count > 0, noisy, agg)
+    return agg
+
+
+def init_ef(spec: CodecSpec, fspec, num_devices: int, *, stacked: bool):
+    """Zero-initialized persistent error-feedback state for ``fspec``
+    (a ``kernels.flatpack.FlatSpec``): ``None`` for stateless codecs, a
+    stacked ``(N, rows, 128)`` array for the scanned carry, else a list
+    of N ``(rows, 128)`` buffers (host loop / batched engine).
+    """
+    if not spec.error_feedback:
+        return None
+    from repro.kernels.flatpack import LANES
+    shape = (fspec.rows, LANES)
+    if stacked:
+        return jnp.zeros((num_devices,) + shape, jnp.float32)
+    return [jnp.zeros(shape, jnp.float32) for _ in range(num_devices)]
+
+
+def round_bytes(algo_spec, codec: CodecSpec, cfg, n_elems: int,
+                n_gather: float, n_up: float) -> Tuple[float, float]:
+    """Honest wire bytes for one round under the declared protocol.
+
+    ``n_elems`` is the REAL (unpadded) parameter count, ``n_gather`` the
+    number of phase-A gradient devices that actually responded (0 for
+    single-phase algorithms; under availability scenarios this is the
+    *thinned* gather — selections that were offline never put bytes on
+    the wire), ``n_up`` the number of solve devices whose update reached
+    the server.
+
+    Model (documented simplifications are deliberate):
+
+    - downlink: the anchor ``w0`` to each participating device in each
+      *separately selected* phase, plus one extra model-width broadcast
+      per solve device for algorithms that ship correction state
+      (FedDANE's ``g_t``, SCAFFOLD's ``c``, SDANE's center).  Shared-
+      selection gathers (``num_selections < 2``) download ``w0`` once.
+    - uplink: phase-A gradients are always dense (they feed the
+      server-side mean before any update exists to compress); solve
+      updates ship at the codec's encoded width; ``feddane_pipelined``
+      additionally uploads the fresh local gradient alongside the
+      update (that co-shipping is exactly what buys its
+      ``comm_per_round = 1``) — dense, like any gather.
+    """
+    dense = DENSE_BYTES * n_elems
+    enc = (codec.uplink_bytes(cfg, n_elems)
+           if codec.uplink_bytes is not None else dense)
+    gather_down = n_gather if algo_spec.num_selections == 2 else 0.0
+    corr_down = 1.0 if algo_spec.correction is not None else 0.0
+    grad_up = 1.0 if algo_spec.updates_g_prev else 0.0
+    down = dense * gather_down + dense * (1.0 + corr_down) * n_up
+    up = dense * n_gather + (enc + dense * grad_up) * n_up
+    return up, down
+
+
+def topk_keep(cfg, n: int) -> int:
+    """Number of coordinates the top-k codec keeps out of ``n`` (shared
+    by the encoder and the byte accounting — at least one)."""
+    return max(1, int(math.ceil(cfg.topk_frac * n)))

@@ -122,6 +122,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FederatedConfig
+from repro.core import codecs
 from repro.core import pytree as pt
 from repro.core import server
 from repro.core import sharding
@@ -132,6 +133,9 @@ from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
                                    algorithm_spec, init_aux,
                                    make_server_opt, runtime_state_fields)
 from repro.data.batching import stack_device_batches, stack_eval_batches
+from repro.kernels.codec import codec_aggregate
+from repro.kernels.flatpack import (LANES, flat_spec, pack_broadcast,
+                                    pack_stacked, unpack)
 from repro.launch.mesh import shard_map_compat
 
 #: Sentinel for "derive the mesh from ``cfg.mesh_devices``" (the
@@ -204,6 +208,19 @@ class RoundEngine:
         # the exact pre-mesh build (bit-identical numerics).
         self.mesh = sharding.mesh_for(cfg) if mesh is _MESH_FROM_CFG \
             else mesh
+        # client→server wire codec (core/codecs): the trivial "none"
+        # spec is a construction-time branch, so every program below is
+        # structurally the exact pre-codec build (bit-identical).  The
+        # fused decode+aggregate kernel is a single-launch cohort
+        # reduction; it does not compose with the sharded client axis.
+        self._codec = codecs.codec_spec(cfg.codec)
+        self._codec_trivial = codecs.is_trivial(self._codec)
+        if not self._codec_trivial and self.mesh is not None:
+            raise ValueError(
+                "codec != 'none' does not compose with mesh_devices > 1 "
+                "yet (the fused decode+aggregate kernel is a single-"
+                "launch cohort reduction); set codec='none' or "
+                "mesh_devices=1")
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs, solver=cfg.local_solver)
@@ -245,11 +262,42 @@ class RoundEngine:
         axis = sharding.DEVICE_AXIS if mesh is not None else None
         shards = mesh.shape[sharding.DEVICE_AXIS] if mesh is not None \
             else 1
+        codec, codec_trivial = self._codec, self._codec_trivial
+        interp = jax.default_backend() == "cpu"
+
+        def codec_agg(w0, params_stack, aux, new, active):
+            """Wire-protocol aggregate: per-client pseudo-gradient
+            deltas on the flat-packed ``(K, rows, 128)`` layout, encoded
+            by the codec spec (consuming/refreshing the cohort's error-
+            feedback slabs carried in ``aux["ef"]``), reduced by the
+            fused dequantize+masked-mean kernel, server-decoded."""
+            fspec = flat_spec(w0)
+            kk = jax.tree_util.tree_leaves(params_stack)[0].shape[0]
+            deltas = (pack_broadcast(fspec, w0, kk)
+                      - pack_stacked(fspec, params_stack, kk)
+                      ).reshape(kk, fspec.rows, LANES)
+            key = aux["codec_key"]
+            efs = aux.get("ef")
+            vals, scales, ef_new = codecs.encode_stacked(
+                codec, cfg, key, deltas, efs)
+            mask = (active.astype(jnp.float32) if active is not None
+                    else jnp.ones((kk,), jnp.float32))
+            agg = codec_aggregate(vals, scales, mask, interpret=interp)
+            agg = codecs.decode_aggregate(codec, cfg, key, agg,
+                                          mask.sum())
+            if ef_new is not None:
+                if active is not None:
+                    # offline clients never transmitted: their error
+                    # accumulator is untouched this round
+                    ef_new = jnp.where(active.reshape(-1, 1, 1) > 0,
+                                       ef_new, efs)
+                new["ef"] = ef_new
+            return pt.sub(w0, unpack(fspec, agg))
 
         def round_core(w0, aux, phase_a, batches, valid, decay,
                        active, work, active_a):
             g_global = g_local = None
-            grad_ok = None
+            grad_ok = avail_n = None
             if spec.grad_source == "fresh":
                 if with_env:
                     # offline devices serve no gradient either: g_t is
@@ -299,13 +347,16 @@ class RoundEngine:
                 nsteps = jnp.minimum(jnp.ceil(work * nsteps), nsteps)
                 res = self._solver_env(w0, corr, mu, batches, valid,
                                        nsteps)
-                w_agg = server.aggregate_stacked_masked(
-                    res.params, active, w0, axis)
             else:
                 res = self._solver(w0, corr, mu, batches, valid)
-                w_agg = server.aggregate_stacked(res.params, axis)
-
             new = dict(aux)
+            if codec_trivial:
+                w_agg = (server.aggregate_stacked_masked(
+                    res.params, active, w0, axis) if with_env
+                    else server.aggregate_stacked(res.params, axis))
+            else:
+                w_agg = codec_agg(w0, res.params, aux, new,
+                                  active if with_env else None)
             if spec.updates_g_prev:
                 new["g_prev"] = (
                     server.aggregate_stacked_masked(
@@ -357,8 +408,13 @@ class RoundEngine:
                 eff = active.sum()
                 if axis is not None:
                     eff = jax.lax.psum(eff, axis)
+                # effective_a: devices that actually served the fresh
+                # gradient gather (0 for stale/gradient-free specs) —
+                # the honest downlink/uplink count for byte telemetry
                 stats = {"intended_k": k, "effective_k": eff,
-                         "dropped": k - eff}
+                         "dropped": k - eff,
+                         "effective_a": (avail_n if avail_n is not None
+                                         else jnp.float32(0.0))}
                 return w_out, new, stats
             return w_out, new
 
@@ -540,6 +596,8 @@ class ScannedDriver:
         cfg, spec = self.cfg, self.spec
         scn, trivial = self.scn, self.scn_trivial
         channels = self._env_channels
+        codec = self.engine._codec
+        codec_trivial = self.engine._codec_trivial
         round_body = (self.engine.round_body if trivial
                       else self.engine.round_body_env)
         n = self.num_devices
@@ -600,6 +658,17 @@ class ScannedDriver:
                 aux["controls"] = (carry["controls"] if full else
                                    tmap(lambda x: x[sel_solve],
                                         carry["controls"]))
+            if not codec_trivial:
+                # same per-round key as the host loop (domain-separated
+                # fold of the round index), so lossy codec paths agree
+                # across drivers under the ideal scenario
+                aux["codec_key"] = codecs.round_key(cfg, xs["t"])
+                if codec.error_feedback:
+                    # error-feedback slabs ride the carry like SCAFFOLD
+                    # controls: gather the cohort's rows, scatter the
+                    # refreshed accumulators back after the round
+                    aux["ef"] = (carry["ef"] if full
+                                 else carry["ef"][sel_solve])
             if trivial:
                 params, aux_new = round_body(
                     carry["params"], aux, phase_a, b, v, decay)
@@ -637,6 +706,10 @@ class ScannedDriver:
                                         c.at[sel_solve].set(cn),
                                         carry["controls"],
                                         aux_new["controls"]))
+            if not codec_trivial and codec.error_feedback:
+                new["ef"] = (aux_new["ef"] if full else
+                             carry["ef"].at[sel_solve].set(
+                                 aux_new["ef"]))
             new["params"] = params
             loss = jax.lax.cond(
                 xs["do_eval"], self._eval_loss,
@@ -644,7 +717,8 @@ class ScannedDriver:
             if trivial:
                 return new, loss
             return new, {"loss": loss,
-                         "effective_k": stats["effective_k"]}
+                         "effective_k": stats["effective_k"],
+                         "effective_a": stats["effective_a"]}
 
         def chunk(carry, xs):
             return jax.lax.scan(body, carry, xs)
@@ -662,6 +736,10 @@ class ScannedDriver:
                  "key": jax.random.PRNGKey(self.cfg.seed)}
         carry.update(init_aux(self.spec, self.cfg, params,
                               self.num_devices, stacked=True))
+        if self.engine._codec.error_feedback:
+            carry["ef"] = codecs.init_ef(
+                self.engine._codec, flat_spec(params),
+                self.num_devices, stacked=True)
         if self.mesh is not None and "controls" in carry:
             carry["controls"] = sharding.shard_stacked(
                 carry["controls"], self.mesh)
@@ -693,8 +771,15 @@ class ScannedDriver:
         eval_mask = (t_all % eval_every == 0) | (t_all == num_rounds - 1)
         hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
                                         "loss": [], "intended_k": [],
-                                        "effective_k": [], "dropped": []}
+                                        "effective_k": [], "dropped": [],
+                                        "bytes_up": [], "bytes_down": []}
         intended = self.k_intended
+        # wire bytes per round (codecs.round_bytes): reconstructed
+        # host-side from the scan's realized participation telemetry
+        n_elems = sum(int(np.prod(np.asarray(x.shape)))
+                      for x in jax.tree_util.tree_leaves(params))
+        gather_full = (float(intended)
+                       if self.spec.grad_source == "fresh" else 0.0)
         chunk_fn = (self._chunk_injected if sel is not None
                     else self._chunk_sampled)
         carry = self._init_carry(params)
@@ -709,14 +794,21 @@ class ScannedDriver:
             if self.scn_trivial:
                 losses = np.asarray(jax.device_get(ys))
                 eff = np.full(hi - off, intended, dtype=np.float64)
+                eff_a = np.full(hi - off, gather_full, dtype=np.float64)
             else:
                 ys = jax.device_get(ys)
                 losses = np.asarray(ys["loss"])
                 eff = np.asarray(ys["effective_k"], dtype=np.float64)
+                eff_a = np.asarray(ys["effective_a"], dtype=np.float64)
             for i, t in enumerate(range(off, hi)):
                 hist["intended_k"].append(float(intended))
                 hist["effective_k"].append(float(eff[i]))
                 hist["dropped"].append(float(intended - eff[i]))
+                up, down = codecs.round_bytes(
+                    self.spec, self.engine._codec, cfg, n_elems,
+                    float(eff_a[i]), float(eff[i]))
+                hist["bytes_up"].append(up)
+                hist["bytes_down"].append(down)
                 if not eval_mask[t]:
                     continue
                 hist["round"].append(t + 1)

@@ -124,3 +124,12 @@ SDANE = register_algorithm(AlgorithmSpec(
     comm_per_round=2, num_selections=2, grad_source="fresh",
     local_grad=True, correction=_sdane_correction,
     center_update=_sdane_center_update, state_fields=("center",)))
+
+ONE_SHOT = register_algorithm(AlgorithmSpec(
+    name="one_shot",
+    summary="EconML-style one-shot federation: every device trains a "
+            "fully local model and the server aggregates exactly once "
+            "(run with num_rounds=1 and a large local_epochs — see "
+            "configs.base.one_shot_config); the extreme point of the "
+            "communication-frugality axis",
+    comm_per_round=1, num_selections=0, use_mu=False))

@@ -1,0 +1,75 @@
+"""Fused codec decode+aggregate Pallas TPU kernel.
+
+    agg = sum_k mask_k * scale_k * vals_k / max(sum_k mask_k, 1)
+
+One launch dequantizes the whole stacked cohort buffer and reduces it
+to the server aggregate: the ``(K, rows, 128)`` transmitted-values
+stack (flat-packed layout from ``kernels/flatpack.py``) is read exactly
+once, against the 2-3 model-sized round trips the unfused
+dequantize -> mask -> mean expression costs.  Like ``dane_update``,
+this is HBM-bandwidth-bound at ~2 flops/byte — fusing is what makes
+compression a speedup instead of a tax on the aggregation path.
+
+Per-client scales and the active mask ride as ``(K, 1)`` columns tiled
+alongside every row block (the ``dane_update_flat`` mask idiom), so the
+inactive-client zeroing, the dequantize multiply, and the cohort mean
+all happen inside the same VPU loop.  Codecs with a shared linear
+post-transform (int8's inverse rotation) apply it to the ``(rows, 128)``
+aggregate AFTER this launch — K× less work than per-client, valid by
+linearity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flatpack import LANES
+
+#: Smaller than dane_update's 512: each grid instance holds the block
+#: for ALL K clients (K * block_rows * 128 * 4B of VMEM).
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _agg_kernel(s_ref, m_ref, v_ref, out_ref):
+    """Dequantize + masked mean over the cohort axis, one row block."""
+    m = m_ref[...]                                  # (K, 1)
+    w = s_ref[...] * m                              # (K, 1) dequant weights
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    v = v_ref[...].astype(jnp.float32)              # (K, block_rows, LANES)
+    acc = jnp.sum(v * w[:, :, None], axis=0) / cnt
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def codec_aggregate(vals, scales, mask, block_rows: int | None = None,
+                    interpret: bool = False):
+    """ONE fused launch: ``(K, rows, LANES)`` encoded cohort -> the
+    ``(rows, LANES)`` dequantized masked-mean aggregate.
+
+    ``scales`` and ``mask`` are ``(K,)`` float32 (per-client dequant
+    scale; 0/1 active mask — inactive clients contribute neither signal
+    nor count, so an all-inactive cohort yields the zero aggregate and
+    the round stays a no-op).  ``block_rows=None`` picks the backend
+    sweet spot exactly like ``dane_update_flat``: largest divisor of
+    ``rows`` ≤ :data:`DEFAULT_BLOCK_ROWS` on TPU, the whole buffer as
+    ONE block in interpret mode.
+    """
+    k, rows, _ = vals.shape
+    if block_rows is None:
+        block_rows = rows if interpret else DEFAULT_BLOCK_ROWS
+    block_rows = min(block_rows, rows)
+    while rows % block_rows != 0:
+        block_rows -= 1
+    scales = jnp.asarray(scales, jnp.float32).reshape(k, 1)
+    mask = jnp.asarray(mask, jnp.float32).reshape(k, 1)
+    kspec = pl.BlockSpec((k, 1), lambda i: (0, 0))
+    vspec = pl.BlockSpec((k, block_rows, LANES), lambda i: (0, i, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[kspec, kspec, vspec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(scales, mask, vals)

@@ -43,6 +43,18 @@ def dane_update_tree_ref(w_tree, grad_tree, corr_tree, anchor_tree, *,
     return jax.tree_util.tree_map(select, new, w_tree)
 
 
+def codec_aggregate_ref(vals, scales, mask):
+    """Dequantize + masked cohort mean — oracle for kernels/codec.py.
+
+    vals: (K, rows, LANES) encoded client updates; scales/mask: (K,).
+    All-inactive cohorts return the zero aggregate (count clamps to 1).
+    """
+    w = (jnp.asarray(scales, jnp.float32)
+         * jnp.asarray(mask, jnp.float32))[:, None, None]
+    cnt = jnp.maximum(jnp.asarray(mask, jnp.float32).sum(), 1.0)
+    return (vals.astype(jnp.float32) * w).sum(axis=0) / cnt
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """Materialized-scores attention.  q,k,v: (B, H, S|T, hd)."""
     B, H, S, hd = q.shape

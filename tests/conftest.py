@@ -44,11 +44,13 @@ def docs_sandbox(monkeypatch):
       absolute numerics, so the clamp cannot mask a docs regression.
     """
     from repro.core import algorithms as algomod
+    from repro.core.codecs import spec as cdc_spec
     from repro.core.scenarios import spec as scn_spec
     from repro.core.strategies import spec as strat_spec
 
     saved_algos = dict(strat_spec._REGISTRY)
     saved_scens = dict(scn_spec._REGISTRY)
+    saved_codecs = dict(cdc_spec._REGISTRY)
 
     orig_init = algomod.FederatedTrainer.__init__
     orig_run = algomod.FederatedTrainer.run
@@ -70,6 +72,8 @@ def docs_sandbox(monkeypatch):
     strat_spec._REGISTRY.update(saved_algos)
     scn_spec._REGISTRY.clear()
     scn_spec._REGISTRY.update(saved_scens)
+    cdc_spec._REGISTRY.clear()
+    cdc_spec._REGISTRY.update(saved_codecs)
 
 
 def leaves_allclose(a, b, atol):
