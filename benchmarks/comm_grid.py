@@ -24,12 +24,25 @@ Grid sizes are fixed (deliberately NOT scaled by BENCH_SCALE): the
 byte totals and ratios must be bit-reproducible against the committed
 baseline for the CI gate to be meaningful.
 
+The ``comm_mesh8_*`` rows measure the SHARDED codec path: the same
+frontier cells executed on an 8-way client mesh (per-shard partial
+dequantize-aggregate + psum, core/engine.py).  Device counts freeze at
+first backend init, so those cells run in a child process under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — which also
+makes them producible on a 1-device CI host.  Their uplink ratios must
+match the unsharded ratios exactly (bytes are counted once globally,
+never per shard), so the committed rows double as a regression gate on
+the sharded byte accounting.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.comm_grid [--out BENCH_comm.json]
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -53,6 +66,13 @@ BASE_KW = dict(num_devices=10, devices_per_round=K, local_epochs=2,
                local_batch_size=10, learning_rate=0.01, mu=0.01, seed=3,
                correction_decay=0.9)
 
+# sharded cells: K must divide the 8-mesh, so they get their own grid
+MESH8_CODECS = ("none", "int8", "topk")
+MESH8_KW = dict(num_devices=16, devices_per_round=8, local_epochs=2,
+                local_batch_size=10, learning_rate=0.01, mu=0.01,
+                seed=3, engine="batched", mesh_devices=8)
+_MESH8_TAG = "MESH8-CELLS:"
+
 
 def _cell(algo: str, codec: str, scn_kw: dict, ds, params):
     cfg = FederatedConfig(algorithm=algo, codec=codec,
@@ -67,6 +87,67 @@ def _cell(algo: str, codec: str, scn_kw: dict, ds, params):
             "bytes_up": float(sum(hist["bytes_up"])),
             "bytes_down": float(sum(hist["bytes_down"])),
             "wall_s": wall}
+
+
+def _mesh8_child() -> None:
+    """Body of the forced-8-device subprocess: run the sharded codec
+    cells and print them as one tagged JSON line for the parent."""
+    assert jax.device_count() == 8, (
+        f"mesh8 child needs 8 forced host devices, "
+        f"got {jax.device_count()}")
+    ds = make_synthetic(0.5, 0.5, num_devices=16, seed=2)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    cells = {}
+    for codec in MESH8_CODECS:
+        cfg = FederatedConfig(algorithm="feddane", codec=codec,
+                              **MESH8_KW)
+        tr = FederatedTrainer(logreg_loss, ds, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, ROUNDS, eval_every=ROUNDS)
+        jax.block_until_ready(final)
+        wall = time.time() - t0
+        assert np.isfinite(hist["loss"]).all(), (
+            f"mesh8/{codec}: loss blew up")
+        cells[codec] = {"final_loss": float(hist["loss"][-1]),
+                        "bytes_up": float(sum(hist["bytes_up"])),
+                        "bytes_down": float(sum(hist["bytes_down"])),
+                        "wall_s": wall}
+    print(_MESH8_TAG + json.dumps(cells))
+
+
+def _mesh8_entries() -> list:
+    """Sharded-codec frontier rows, measured in a child process with 8
+    forced host CPU devices (works on any host, incl. 1-device CI)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.comm_grid", "--mesh8-child"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh8 bench child failed\n--- stdout ---\n{proc.stdout}"
+            f"\n--- stderr ---\n{proc.stderr}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith(_MESH8_TAG))
+    cells = json.loads(line[len(_MESH8_TAG):])
+    dense_up = cells["none"]["bytes_up"]
+    entries = []
+    for codec, cell in sorted(cells.items()):
+        ratio = dense_up / max(cell["bytes_up"], 1.0)
+        entries.append(bench_entry(
+            f"comm_mesh8_{codec}_feddane_ideal", mode="comm",
+            driver="batched", k=8, mesh_devices=8,
+            ms_per_round=cell["wall_s"] * 1e3 / ROUNDS,
+            algo="feddane", codec=codec, scenario="ideal",
+            speedup=round(ratio, 4),
+            final_loss=round(cell["final_loss"], 6),
+            bytes_up=cell["bytes_up"],
+            bytes_down=cell["bytes_down"]))
+        print(f"comm_mesh8_{codec}_feddane_ideal,"
+              f"{cell['bytes_up']:.0f},x{ratio:.2f}_"
+              f"loss{cell['final_loss']:.4f}")
+    return entries
 
 
 def main(out_path: str = "BENCH_comm.json"):
@@ -107,15 +188,24 @@ def main(out_path: str = "BENCH_comm.json"):
         final_loss=round(float(hist["loss"][-1]), 6),
         bytes_up=float(sum(hist["bytes_up"])),
         bytes_down=float(sum(hist["bytes_down"]))))
+    # the sharded codec path: same frontier, 8-way mesh (subprocess)
+    entries.extend(_mesh8_entries())
     # acceptance floors (single-phase uplink): keep the committed
     # baseline honest at generation time, not just in CI comparisons
     by_name = {e["name"]: e for e in entries}
     assert by_name["comm_int8_fedavg_ideal"]["speedup"] >= 3.0
     assert by_name["comm_topk_fedavg_ideal"]["speedup"] >= 8.0
+    # the mesh8 rows count bytes once globally, so their ratios equal
+    # the unsharded feddane ratios for the same codec knobs
+    assert by_name["comm_mesh8_int8_feddane_ideal"]["speedup"] > 1.0
+    assert by_name["comm_mesh8_topk_feddane_ideal"]["speedup"] > 1.0
     write_bench_json(out_path, entries)
 
 
 if __name__ == "__main__":
+    if "--mesh8-child" in sys.argv:
+        _mesh8_child()
+        sys.exit(0)
     out = "BENCH_comm.json"
     if "--out" in sys.argv:
         out = sys.argv[sys.argv.index("--out") + 1]

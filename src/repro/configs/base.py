@@ -287,9 +287,12 @@ class FederatedConfig:
     def __post_init__(self):
         # Registry-backed validation: the algorithm-strategy and
         # scenario registries are the only lists of valid names
-        # (imported lazily — configs is a leaf layer).  engine /
-        # round_driver stay late-validated by the trainer, which owns
-        # their backend-dependent resolution.
+        # (imported lazily — configs is a leaf layer).  Composition
+        # rejections live HERE so invalid knob pairs fail at
+        # construction with an actionable message, not deep inside an
+        # engine/driver build; only backend-dependent resolution (the
+        # live device count behind mesh_devices="auto") stays with the
+        # trainer.
         from repro.core.codecs import codec_spec
         from repro.core.scenarios import scenario_spec
         from repro.core.strategies import (algorithm_spec,
@@ -298,6 +301,30 @@ class FederatedConfig:
         validate_server_opt(self.server_opt)
         scenario_spec(self.scenario)
         codec_spec(self.codec)
+        if self.engine not in ("auto", "batched", "loop"):
+            raise ValueError(
+                f"unknown engine {self.engine!r}; choose from "
+                f"auto/batched/loop")
+        if self.round_driver not in ("auto", "python", "scan",
+                                     "buffered"):
+            raise ValueError(
+                f"unknown round_driver {self.round_driver!r}; choose "
+                f"from auto/python/scan/buffered")
+        # the one composition the registries do NOT close: the looped
+        # per-device reference engine is single-device by construction.
+        # (codec × mesh, buffered × mesh, and buffered × control
+        # variates + replacement all compose — see core/engine.py and
+        # core/async_engine.py.)  mesh_devices="auto" may still resolve
+        # to 1 on a single-device host, so only a concrete int is
+        # rejected here; the trainer re-checks after resolution.
+        if (self.engine == "loop" and isinstance(self.mesh_devices, int)
+                and not isinstance(self.mesh_devices, bool)
+                and self.mesh_devices > 1):
+            raise ValueError(
+                f"engine='loop' does not compose with mesh_devices="
+                f"{self.mesh_devices}: the looped per-device reference "
+                f"path is single-device by construction (set "
+                f"engine='batched' or 'auto', or mesh_devices=1)")
         if not (isinstance(self.bits, int)
                 and not isinstance(self.bits, bool)
                 and 2 <= self.bits <= 8):

@@ -174,14 +174,6 @@ class FederatedTrainer:
         # know it.  mesh_devices=1 (default) -> None -> every program
         # below stays structurally pre-mesh.
         self.mesh = sharding.mesh_for(cfg)
-        if not self._codec_trivial and self.mesh is not None:
-            # the fused decode+aggregate kernel reduces the whole cohort
-            # in one launch; a sharded cohort would need split
-            # numerator/denominator psums around it — not wired up yet
-            raise ValueError(
-                "codec != 'none' does not compose with mesh_devices > 1 "
-                "yet (the fused decode+aggregate is a single-launch "
-                "cohort reduction); set codec='none' or mesh_devices=1")
         engine = cfg.engine
         if engine == "auto":
             # a requested mesh implies the batched SPMD round even on

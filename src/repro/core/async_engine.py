@@ -45,9 +45,21 @@ The spec phases map onto the event queue as follows:
   Corrections read the launch-time snapshot; commits write back in
   arrival order (last-writer-wins under duplicate completions), and the
   server control absorbs ``sum(deltas)/N`` per commit — the synchronous
-  rule, applied per commit.
+  rule, applied per commit.  Under ``sample_with_replacement`` a client
+  may appear twice in ONE cohort: those positions are solved in
+  sequential occurrence layers (``_solve_duplicates``), each reading
+  the control the previous duplicate refreshed — the python driver's
+  per-duplicate semantics, so degenerate parity includes replacement
+  sampling.
 - **Prox centers** (sdane) and time-dependent ``decay`` advance on the
   server's commit counter, the async analogue of the round index.
+
+Mesh sharding (``mesh_devices > 1``) composes via masked padding:
+cohort solves and commit buffers are padded up to the next multiple of
+the mesh size — padded solve rows carry all-zero valid masks (identity
+steps) and padded commit rows carry weight 0 (dropped by the psum-ed
+weighted mean) — so every launch and every commit runs as ONE
+shard-mapped SPMD program regardless of the varying cohort sizes.
 
 Degenerate-parity contract (pinned by tests/test_async_engine.py): with
 ``buffer_size == K``, a latency-free scenario (cohorts stay aligned) and
@@ -75,6 +87,7 @@ from repro.configs.base import FederatedConfig
 from repro.core import codecs
 from repro.core import pytree as pt
 from repro.core import server
+from repro.core import sharding
 from repro.core.client import make_batched_grad_fn, make_batched_solver
 from repro.core.scenarios import (env_channels, is_trivial,
                                   realize_event_env, scenario_spec)
@@ -83,6 +96,7 @@ from repro.core.strategies import (ControlCtx, CorrCtx, algorithm_spec,
 from repro.data.batching import stack_device_batches
 from repro.kernels.flatpack import (LANES, flat_spec, pack,
                                     pack_broadcast, pack_stacked, unpack)
+from repro.launch.mesh import shard_map_compat
 
 #: Safety factor on the event budget: a run may process at most
 #: ``HORIZON_FACTOR * num_rounds * max(K, M)`` arrivals before the
@@ -160,21 +174,7 @@ class BufferedDriver(object):
         programs.  ``engine`` is accepted (and ignored) for signature
         compatibility with the other drivers — the buffered path always
         solves cohorts on the batched vmapped solver."""
-        from repro.core import sharding
-        if sharding.mesh_for(cfg) is not None:
-            raise ValueError(
-                "round_driver='buffered' does not compose with "
-                "mesh_devices > 1 yet: cohort sizes vary between "
-                "commits, which breaks the mesh's even-shard contract "
-                "(set mesh_devices=1)")
         self.spec = algorithm_spec(cfg.algorithm)
-        if (self.spec.control_update is not None
-                and cfg.sample_with_replacement):
-            raise ValueError(
-                "control-variate specs with sample_with_replacement "
-                "need sequential duplicate control updates; within one "
-                "asynchronous cohort duplicates share a launch snapshot "
-                "— use the python driver for this combination")
         self.loss_fn = loss_fn
         self.dataset = dataset
         self.cfg = cfg
@@ -198,12 +198,34 @@ class BufferedDriver(object):
         # (dp_gauss noise) run inside the jitted commit program.
         self._codec = codecs.codec_spec(cfg.codec)
         self._codec_trivial = codecs.is_trivial(self._codec)
+        # client-axis mesh (core/sharding.py): cohort sizes vary between
+        # launches (refills of m < K clients) and the buffer size need
+        # not divide the mesh, so BOTH SPMD programs — the shard-mapped
+        # cohort solve and the shard-mapped commit — run on buffers
+        # padded up to the next multiple of D with masked lanes: padded
+        # solve rows carry valid=0 (identity steps, sliced off on
+        # return), padded commit rows carry weight 0 (dropped by the
+        # psum-ed weighted mean).  mesh_devices=1 builds no mesh and
+        # every program below is structurally the pre-mesh build.
+        self.mesh = sharding.mesh_for(cfg)
+        self._shards = (self.mesh.shape[sharding.DEVICE_AXIS]
+                        if self.mesh is not None else 1)
+        self._m_pad = -(-self._m // self._shards) * self._shards
         self.rng = np.random.default_rng(cfg.seed)
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs, with_cutoff=self._has_work,
             solver=cfg.local_solver)
-        self._jsolve = jax.jit(self._solver)
+        if self.mesh is not None:
+            dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+            in_specs = (rep, dev, rep, dev, dev)
+            if self._has_work:
+                in_specs += (dev,)
+            self._jsolve = jax.jit(shard_map_compat(
+                self._solver, self.mesh, in_specs=in_specs,
+                out_specs=dev, manual_axes=(sharding.DEVICE_AXIS,)))
+        else:
+            self._jsolve = jax.jit(self._solver)
         self._grads = jax.jit(make_batched_grad_fn(loss_fn))
         self._server_opt = make_server_opt(self.spec, cfg)
         self._commit_fn = self._make_commit()
@@ -218,16 +240,22 @@ class BufferedDriver(object):
         server (optimizer) step, one dispatch per commit.  Codecs with a
         server-side post-aggregate transform (dp_gauss noise) get a
         variant taking the commit's codec key and effective count; the
-        trivial codec keeps the exact pre-codec program."""
+        trivial codec keeps the exact pre-codec program.  Under a mesh
+        the program is shard-mapped over the (padded) buffer axis: the
+        weighted reduce psums numerator and weight sum over the mesh,
+        the server step runs replicated — one SPMD program per commit.
+        """
         opt = self._server_opt
         codec, cfg = self._codec, self.cfg
+        mesh = self.mesh
+        axis = sharding.DEVICE_AXIS if mesh is not None else None
         self._commit_takes_key = (not self._codec_trivial
                                   and codec.post_aggregate is not None)
 
         if self._commit_takes_key:
-            @jax.jit
             def commit(w, opt_state, buf, weights, key, count):
-                pg = server.aggregate_buffered(buf, weights)
+                pg = server.aggregate_buffered(buf, weights,
+                                               axis_name=axis)
                 fspec = flat_spec(w)
                 flat = codec.post_aggregate(
                     cfg, key, pack(fspec, pg), jnp.maximum(count, 1.0))
@@ -235,13 +263,21 @@ class BufferedDriver(object):
                 return server.server_step(w, pt.sub(w, pg), opt,
                                           opt_state)
         else:
-            @jax.jit
             def commit(w, opt_state, buf, weights):
-                pg = server.aggregate_buffered(buf, weights)
+                pg = server.aggregate_buffered(buf, weights,
+                                               axis_name=axis)
                 return server.server_step(w, pt.sub(w, pg), opt,
                                           opt_state)
 
-        return commit
+        if mesh is not None:
+            dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+            in_specs = (rep, rep, dev, dev)
+            if self._commit_takes_key:
+                in_specs += (rep, rep)
+            commit = shard_map_compat(
+                commit, mesh, in_specs=in_specs, out_specs=(rep, rep),
+                manual_axes=(sharding.DEVICE_AXIS,))
+        return jax.jit(commit)
 
     # -- sampling / environment -------------------------------------------
 
@@ -285,6 +321,103 @@ class BufferedDriver(object):
         n = self.dataset.num_devices
         return {c: jnp.asarray(self.rng.random(n), jnp.float32)
                 for c in self._env_channels}
+
+    # -- the cohort solve -------------------------------------------------
+
+    def _solve_cohort(self, w, corr, mu, b, v, limit):
+        """One batched local solve of an m-client cohort, mesh-aware.
+
+        Under a mesh the stacked solve inputs are padded up to the next
+        multiple of D with zero rows — a padded row's all-zero valid
+        mask makes the solver take identity steps (the PR-1 masked-lane
+        contract), and the padding is sliced off the result — so every
+        cohort size runs as ONE SPMD program on the shard-mapped
+        solver.  Without a mesh (``_shards == 1``) no padding happens
+        and this is exactly the pre-mesh ``_jsolve`` call.
+        """
+        m = v.shape[0]
+        m_pad = -(-m // self._shards) * self._shards
+        if m_pad != m:
+            def zpad(x):
+                widths = [(0, m_pad - m)] + [(0, 0)] * (x.ndim - 1)
+                return jnp.pad(x, widths)
+            b = jax.tree_util.tree_map(zpad, b)
+            v = zpad(jnp.asarray(v))
+            corr = jax.tree_util.tree_map(zpad, corr)
+            if limit is not None:
+                limit = np.concatenate(
+                    [np.asarray(limit),
+                     np.zeros((m_pad - m,), np.asarray(limit).dtype)])
+        if limit is not None:
+            res = self._jsolve(w, corr, mu, b, v,
+                               jnp.asarray(limit, jnp.int32))
+        else:
+            res = self._jsolve(w, corr, mu, b, v)
+        if m_pad != m:
+            res = jax.tree_util.tree_map(lambda x: x[:m], res)
+        return res
+
+    def _solve_duplicates(self, cohort, w, aux, b, v, limit, g_local,
+                          corr_for, mu):
+        """Sequential per-duplicate solves for control-variate specs
+        under ``sample_with_replacement``.
+
+        Cohort position ``i`` belongs to occurrence layer
+        ``L = (earlier positions holding the same client)``; layers are
+        solved in order, each reading the LIVE control refreshed by the
+        previous layer — so a client appearing twice in one cohort gets
+        two sequential control updates, exactly the python driver's
+        ``_loop_round`` semantics (its corrections likewise read the
+        launch-time ``c_server`` snapshot but the client's refreshed
+        ``c_local``).  Commit-time writeback stays last-writer-wins and
+        ``sum(c_delta)`` telescopes to the same server-control update.
+        Each layer is a (padded) batched solve via ``_solve_cohort``,
+        so this path composes with mesh sharding too.  Returns the
+        ``(m, ...)`` stacks in cohort-position order so codec slots and
+        flight rows are position-addressed as in the plain path.
+        """
+        spec, cfg = self.spec, self.cfg
+        m = len(cohort)
+        tmap = jax.tree_util.tree_map
+        zeros = pt.zeros_like(w)
+        live = {int(k): aux["controls"].get(int(k), zeros)
+                for k in cohort}
+        occ = np.zeros((m,), np.int64)
+        seen: Dict[int, int] = {}
+        for i, k in enumerate(cohort):
+            occ[i] = seen.get(int(k), 0)
+            seen[int(k)] = int(occ[i]) + 1
+        rows_p: List[Any] = [None] * m
+        rows_ns: List[Any] = [None] * m
+        rows_cn: List[Any] = [None] * m
+        rows_cd: List[Any] = [None] * m
+        for layer in range(int(occ.max()) + 1):
+            idx = np.nonzero(occ == layer)[0]
+            c_stack = tmap(lambda *xs: jnp.stack(xs),
+                           *[live[int(cohort[i])] for i in idx])
+            b_l = tmap(lambda x: x[idx], b)
+            v_l = jnp.asarray(v)[idx]
+            g_l = (tmap(lambda x: x[idx], g_local)
+                   if g_local is not None else None)
+            corr = corr_for(c_stack, g_l, len(idx))
+            res = self._solve_cohort(
+                w, corr, mu, b_l, v_l,
+                None if limit is None else np.asarray(limit)[idx])
+            inv_steps = 1.0 / (jnp.maximum(res.num_steps, 1)
+                               * cfg.learning_rate)
+            c_new = spec.control_update(ControlCtx(
+                c_local=c_stack, c_server=aux["c_server"], w0=w,
+                w_new=res.params, inv_steps=inv_steps))
+            c_delta = pt.sub(c_new, c_stack)
+            for j, i in enumerate(idx):
+                rows_p[i] = tmap(lambda x, j=j: x[j], res.params)
+                rows_ns[i] = res.num_steps[j]
+                rows_cn[i] = tmap(lambda x, j=j: x[j], c_new)
+                rows_cd[i] = tmap(lambda x, j=j: x[j], c_delta)
+                live[int(cohort[i])] = rows_cn[i]
+        stack = lambda rows: tmap(lambda *xs: jnp.stack(xs), *rows)
+        return (stack(rows_p), jnp.stack(rows_ns), stack(rows_cn),
+                stack(rows_cd))
 
     # -- the cohort launch ------------------------------------------------
 
@@ -341,39 +474,51 @@ class BufferedDriver(object):
 
         b, v = stack_device_batches(self.dataset, cohort)
         g_local = self._grads(w, b, v) if spec.local_grad else None
-        c_stack = None
-        if spec.control_update is not None:
-            zeros = pt.zeros_like(w)
-            c_stack = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs),
-                *[aux["controls"].get(int(k), zeros) for k in cohort])
-        if spec.correction is not None and not (
-                spec.grad_source == "fresh" and g_global is None):
-            corr = spec.correction(CorrCtx(
-                w0=w, g_global=g_global, g_local=g_local,
-                c_server=aux.get("c_server"), c_local=c_stack,
-                center=aux.get("center"), mu=mu, decay=decay))
-        else:
-            corr = jax.tree_util.tree_map(
-                lambda x: jnp.zeros((m,) + x.shape, x.dtype), w)
+
+        def corr_for(c_stack_, g_local_, mm):
+            if spec.correction is not None and not (
+                    spec.grad_source == "fresh" and g_global is None):
+                return spec.correction(CorrCtx(
+                    w0=w, g_global=g_global, g_local=g_local_,
+                    c_server=aux.get("c_server"), c_local=c_stack_,
+                    center=aux.get("center"), mu=mu, decay=decay))
+            return jax.tree_util.tree_map(
+                lambda x: jnp.zeros((mm,) + x.shape, x.dtype), w)
 
         if self._has_work:
             total = cfg.local_epochs * np.asarray(v).sum(axis=1)
             wf = work if work is not None else np.ones((m,))
             limit = np.minimum(total, np.ceil(wf * total))
-            res = self._jsolve(w, corr, mu, b, v,
-                               jnp.asarray(limit, jnp.int32))
         else:
-            res = self._jsolve(w, corr, mu, b, v)
+            limit = None
 
         c_new = c_delta = None
-        if spec.control_update is not None:
-            inv_steps = 1.0 / (jnp.maximum(res.num_steps, 1)
-                               * cfg.learning_rate)
-            c_new = spec.control_update(ControlCtx(
-                c_local=c_stack, c_server=aux["c_server"], w0=w,
-                w_new=res.params, inv_steps=inv_steps))
-            c_delta = pt.sub(c_new, c_stack)
+        if (spec.control_update is not None
+                and len(np.unique(cohort)) < m):
+            # duplicate arrivals within one cohort (replacement
+            # sampling): sequential occurrence-layer solves, reading
+            # the control refreshed by the previous duplicate
+            res_params, num_steps, c_new, c_delta = \
+                self._solve_duplicates(cohort, w, aux, b, v, limit,
+                                       g_local, corr_for, mu)
+        else:
+            c_stack = None
+            if spec.control_update is not None:
+                zeros = pt.zeros_like(w)
+                c_stack = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[aux["controls"].get(int(k), zeros)
+                      for k in cohort])
+            corr = corr_for(c_stack, g_local, m)
+            res = self._solve_cohort(w, corr, mu, b, v, limit)
+            res_params, num_steps = res.params, res.num_steps
+            if spec.control_update is not None:
+                inv_steps = 1.0 / (jnp.maximum(num_steps, 1)
+                                   * cfg.learning_rate)
+                c_new = spec.control_update(ControlCtx(
+                    c_local=c_stack, c_server=aux["c_server"], w0=w,
+                    w_new=res_params, inv_steps=inv_steps))
+                c_delta = pt.sub(c_new, c_stack)
 
         # codec encode, client-side at launch: the flight carries the
         # DECODED delta (per-client post_decode is valid by the spec's
@@ -386,7 +531,7 @@ class BufferedDriver(object):
             fspec = flat_spec(w)
             key = codecs.round_key(cfg, version)
             deltas = (pack_broadcast(fspec, w, m)
-                      - pack_stacked(fspec, res.params, m)
+                      - pack_stacked(fspec, res_params, m)
                       ).reshape(m, fspec.rows, LANES)
             efs = None
             if codec.error_feedback:
@@ -416,7 +561,7 @@ class BufferedDriver(object):
 
         flights = []
         for i, k in enumerate(cohort):
-            row = jax.tree_util.tree_map(lambda x, i=i: x[i], res.params)
+            row = jax.tree_util.tree_map(lambda x, i=i: x[i], res_params)
             flights.append(_Flight(
                 done=now + float(latency[i]), seq=seq0 + i,
                 client=int(k), anchor_version=version, launch=now,
@@ -480,7 +625,10 @@ class BufferedDriver(object):
         enc = (self._codec.uplink_bytes(cfg, self._n_elems)
                if self._codec.uplink_bytes is not None else dense)
         grad_up = dense if spec.updates_g_prev else 0.0
-        buffer = _CommitBuffer(params, self._m)
+        # under a mesh the staging buffer is padded to the even-shard
+        # contract; rows >= self._m are never staged and always commit
+        # with weight 0, so they drop out of the psum-ed weighted mean
+        buffer = _CommitBuffer(params, self._m_pad)
         pending: List[_Flight] = []       # metadata of staged updates
         inflight: List[_Flight] = []      # heap by (done, seq)
         version = 0                       # commits so far
@@ -521,6 +669,10 @@ class BufferedDriver(object):
                 [version - f.anchor_version for f in pending], np.float32)
             weights = server.staleness_weight(cfg.staleness_fn,
                                               jnp.asarray(stal))
+            if self._m_pad != self._m:
+                # masked padding lanes: weight 0 = no contribution
+                weights = jnp.pad(weights,
+                                  (0, self._m_pad - self._m))
             if self._commit_takes_key:
                 w, opt_state = self._commit_fn(
                     w, opt_state, buffer.swap(), weights,

@@ -186,15 +186,21 @@ def round_key(cfg, t):
     return jax.random.fold_in(base, t)
 
 
-def encode_stacked(spec: CodecSpec, cfg, key, flats, efs):
+def encode_stacked(spec: CodecSpec, cfg, key, flats, efs, idx0=0):
     """Vmapped client-side encode over a stacked ``(K, rows, 128)``
     cohort of flat deltas.  ``efs`` is the matching stacked error-
     feedback buffer (``None`` unless ``spec.error_feedback``).  Returns
     ``(vals (K, rows, 128), scales (K,), ef_new)`` with ``ef_new=None``
     for stateless codecs.  Works under jit (client slots, not device
     ids, seed the per-client draws — see module docs).
+
+    ``idx0`` offsets the cohort slots: a shard-mapped round body passes
+    ``axis_index * k_local`` so shard-local slot 0 draws the SAME
+    per-client randomness as global slot ``shard * k_local`` would in
+    the unsharded program — without it every shard would restart at
+    slot 0 and mesh1-vs-meshD parity for RNG codecs (int8) breaks.
     """
-    idx = jnp.arange(flats.shape[0])
+    idx = idx0 + jnp.arange(flats.shape[0])
     if spec.error_feedback:
         def one(i, f, e):
             return spec.encode(cfg, key, i, f, e)

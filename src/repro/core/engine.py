@@ -115,6 +115,7 @@ pre-mesh build, bit-identical.  Parity gate: tests/test_sharding.py.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -133,7 +134,7 @@ from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
                                    algorithm_spec, init_aux,
                                    make_server_opt, runtime_state_fields)
 from repro.data.batching import stack_device_batches, stack_eval_batches
-from repro.kernels.codec import codec_aggregate
+from repro.kernels.codec import codec_aggregate, codec_aggregate_partial
 from repro.kernels.flatpack import (LANES, flat_spec, pack_broadcast,
                                     pack_stacked, unpack)
 from repro.launch.mesh import shard_map_compat
@@ -152,6 +153,31 @@ def _donate_argnums(nums: Tuple[int, ...]) -> Tuple[int, ...]:
 def _stack_zeros(w0, k: int):
     return jax.tree_util.tree_map(
         lambda x: jnp.zeros((k,) + x.shape, x.dtype), w0)
+
+
+#: (N, D) pairs already warned about — the replicated-layout fallback
+#: warning fires once per distinct shape, not once per round/driver.
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_replicated_fallback(n: int, d: int) -> None:
+    """One-time warning when the all-client ``(N, ...)`` tensors cannot
+    shard evenly over the mesh and silently fall back to replication.
+
+    The per-round cohort (K clients) still shards — that divisibility
+    is checked with a hard error — but the big pre-stacked batch/eval
+    tensors land replicated on every mesh device, so memory does NOT
+    scale down with D and benchmarks must not attribute the run to a
+    fully sharded layout (run history records ``sharded: 0.0``)."""
+    if (n, d) in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add((n, d))
+    warnings.warn(
+        f"mesh layout fallback: num_devices={n} is not divisible by "
+        f"mesh_devices={d}; the all-client stacked tensors are "
+        f"REPLICATED on every mesh device (per-round cohorts still "
+        f"shard). Memory will not scale with the mesh; run history "
+        f"records sharded=0.0 for this run.", stacklevel=3)
 
 
 class RoundEngine:
@@ -210,17 +236,13 @@ class RoundEngine:
             else mesh
         # client→server wire codec (core/codecs): the trivial "none"
         # spec is a construction-time branch, so every program below is
-        # structurally the exact pre-codec build (bit-identical).  The
-        # fused decode+aggregate kernel is a single-launch cohort
-        # reduction; it does not compose with the sharded client axis.
+        # structurally the exact pre-codec build (bit-identical).
+        # Under a mesh the fused decode+aggregate becomes a per-shard
+        # partial masked SUM followed by a psum of partials and counts
+        # (see codec_agg below), so the sharded aggregate matches the
+        # single-launch cohort reduction to float-association order.
         self._codec = codecs.codec_spec(cfg.codec)
         self._codec_trivial = codecs.is_trivial(self._codec)
-        if not self._codec_trivial and self.mesh is not None:
-            raise ValueError(
-                "codec != 'none' does not compose with mesh_devices > 1 "
-                "yet (the fused decode+aggregate kernel is a single-"
-                "launch cohort reduction); set codec='none' or "
-                "mesh_devices=1")
         self._solver = make_batched_solver(
             loss_fn, learning_rate=cfg.learning_rate,
             num_epochs=cfg.local_epochs, solver=cfg.local_solver)
@@ -278,13 +300,32 @@ class RoundEngine:
                       ).reshape(kk, fspec.rows, LANES)
             key = aux["codec_key"]
             efs = aux.get("ef")
+            # cohort slots seed per-client encode draws: under a mesh
+            # each shard offsets its local arange by axis_index * K/D so
+            # the sharded program draws exactly the unsharded slots
+            idx0 = (jax.lax.axis_index(axis) * kk if axis is not None
+                    else 0)
             vals, scales, ef_new = codecs.encode_stacked(
-                codec, cfg, key, deltas, efs)
+                codec, cfg, key, deltas, efs, idx0=idx0)
             mask = (active.astype(jnp.float32) if active is not None
                     else jnp.ones((kk,), jnp.float32))
-            agg = codec_aggregate(vals, scales, mask, interpret=interp)
-            agg = codecs.decode_aggregate(codec, cfg, key, agg,
-                                          mask.sum())
+            if axis is not None:
+                # per-shard partial masked SUM, then one psum of the
+                # dequantized partials + contributing counts over the
+                # mesh axis, divided exactly once — the sharded half of
+                # the fused aggregate (kernels/codec.py)
+                part = codec_aggregate_partial(vals, scales, mask,
+                                               interpret=interp)
+                num = jax.lax.psum(part, axis)
+                cnt = jax.lax.psum(mask.sum(), axis)
+                agg = num / jnp.maximum(cnt, 1.0)
+            else:
+                agg = codec_aggregate(vals, scales, mask,
+                                      interpret=interp)
+                cnt = mask.sum()
+            # post stages run replicated per shard off the shared round
+            # key, so every shard applies the identical transform
+            agg = codecs.decode_aggregate(codec, cfg, key, agg, cnt)
             if ef_new is not None:
                 if active is not None:
                     # offline clients never transmitted: their error
@@ -446,7 +487,11 @@ class RoundEngine:
                     active=None, work=None, active_a=None):
             sharding.check_divisible(valid.shape[0], mesh,
                                      "stacked selection size")
-            aux_spec = {f: (dev if f == "controls" else rep)
+            # per-client stacked state shards with the clients it
+            # belongs to: SCAFFOLD controls and codec error-feedback
+            # slabs; everything else (w0, g_prev, c_server, opt state,
+            # the shared codec round key) replicates
+            aux_spec = {f: (dev if f in ("controls", "ef") else rep)
                         for f in aux}
             phase_spec = None if phase_a is None else (dev, dev)
             env = (active, work, active_a)
@@ -555,12 +600,20 @@ class ScannedDriver:
         self.batches_all, self.valid_all = stack_device_batches(
             dataset, np.arange(self.num_devices))
         eb, ev, ew = stack_eval_batches(dataset)
+        #: whether the all-client tensors actually shard over the mesh
+        #: (False on the N % D != 0 replicated fallback) — recorded in
+        #: run-history telemetry so benchmarks can't misattribute runs
+        self._layout_sharded = self.mesh is not None
         if self.mesh is not None:
             # lay the big all-client tensors out along the mesh up
             # front (leading-axis NamedSharding when N divides evenly,
             # replicated otherwise) so the chunk program starts from
             # the layout the shard-mapped round body wants instead of
             # re-sharding per round
+            d = self.mesh.shape[sharding.DEVICE_AXIS]
+            if self.num_devices % d != 0:
+                self._layout_sharded = False
+                _warn_replicated_fallback(self.num_devices, d)
             self.batches_all = sharding.shard_stacked(self.batches_all,
                                                       self.mesh)
             self.valid_all = sharding.shard_stacked(self.valid_all,
@@ -740,9 +793,11 @@ class ScannedDriver:
             carry["ef"] = codecs.init_ef(
                 self.engine._codec, flat_spec(params),
                 self.num_devices, stacked=True)
-        if self.mesh is not None and "controls" in carry:
-            carry["controls"] = sharding.shard_stacked(
-                carry["controls"], self.mesh)
+        if self.mesh is not None:
+            for f in ("controls", "ef"):
+                if f in carry:
+                    carry[f] = sharding.shard_stacked(carry[f],
+                                                      self.mesh)
         return carry
 
     def run(self, params, num_rounds: int, eval_every: int = 1,
@@ -773,6 +828,10 @@ class ScannedDriver:
                                         "loss": [], "intended_k": [],
                                         "effective_k": [], "dropped": [],
                                         "bytes_up": [], "bytes_down": []}
+        if self.mesh is not None:
+            # layout telemetry: 1.0 when the all-client tensors shard
+            # over the mesh, 0.0 on the replicated N % D fallback
+            hist["sharded"] = []
         intended = self.k_intended
         # wire bytes per round (codecs.round_bytes): reconstructed
         # host-side from the scan's realized participation telemetry
@@ -801,6 +860,9 @@ class ScannedDriver:
                 eff = np.asarray(ys["effective_k"], dtype=np.float64)
                 eff_a = np.asarray(ys["effective_a"], dtype=np.float64)
             for i, t in enumerate(range(off, hi)):
+                if self.mesh is not None:
+                    hist["sharded"].append(
+                        1.0 if self._layout_sharded else 0.0)
                 hist["intended_k"].append(float(intended))
                 hist["effective_k"].append(float(eff[i]))
                 hist["dropped"].append(float(intended - eff[i]))

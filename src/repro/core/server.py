@@ -180,7 +180,7 @@ def staleness_weight(name: str, staleness):
         f"{', '.join(STALENESS_FNS)}")
 
 
-def aggregate_buffered(deltas, weights):
+def aggregate_buffered(deltas, weights, axis_name=None):
     """Staleness-weighted mean of a full commit buffer: ``deltas`` is a
     pytree with a leading buffer axis M (each row one client's
     pseudo-gradient ``anchor_i - w_i``), ``weights`` a float ``(M,)``
@@ -189,15 +189,27 @@ def aggregate_buffered(deltas, weights):
     :func:`server_step` as ``w - pg``.  With constant weights this is
     exactly ``aggregate_stacked`` (the synchronous mean), which is the
     buffered driver's degenerate-parity anchor.  Traceable.
+
+    ``axis_name``: inside a ``shard_map``-ed commit the buffer axis is
+    sharded over the mesh — the weighted numerator and the weight sum
+    are both ``psum``-ed over ``axis_name`` before the single division,
+    so the sharded commit equals the unsharded weighted mean (padded
+    lanes carry weight 0 and drop out of both sums).
     """
     import jax
     import jax.numpy as jnp
 
-    wsum = jnp.maximum(weights.sum(), 1e-12)
+    wsum = weights.sum()
+    if axis_name is not None:
+        wsum = jax.lax.psum(wsum, axis_name)
+    wsum = jnp.maximum(wsum, 1e-12)
 
     def wmean(x):
         w = weights.reshape(weights.shape + (1,) * (x.ndim - 1))
-        return (x * w).sum(axis=0) / wsum
+        num = (x * w).sum(axis=0)
+        if axis_name is not None:
+            num = jax.lax.psum(num, axis_name)
+        return num / wsum
 
     return jax.tree_util.tree_map(wmean, deltas)
 

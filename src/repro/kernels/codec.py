@@ -41,6 +41,38 @@ def _agg_kernel(s_ref, m_ref, v_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _agg_sum_kernel(s_ref, m_ref, v_ref, out_ref):
+    """Dequantize + masked SUM over the cohort axis (no normalization):
+    the per-shard partial of the sharded aggregate."""
+    m = m_ref[...]                                  # (K_local, 1)
+    w = s_ref[...] * m                              # (K_local, 1)
+    v = v_ref[...].astype(jnp.float32)
+    acc = jnp.sum(v * w[:, :, None], axis=0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _launch_agg(kernel, vals, scales, mask, block_rows, interpret):
+    k, rows, _ = vals.shape
+    if block_rows is None:
+        block_rows = rows if interpret else DEFAULT_BLOCK_ROWS
+    block_rows = min(block_rows, rows)
+    while rows % block_rows != 0:
+        block_rows -= 1
+    scales = jnp.asarray(scales, jnp.float32).reshape(k, 1)
+    mask = jnp.asarray(mask, jnp.float32).reshape(k, 1)
+    kspec = pl.BlockSpec((k, 1), lambda i: (0, 0))
+    vspec = pl.BlockSpec((k, block_rows, LANES), lambda i: (0, i, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[kspec, kspec, vspec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(scales, mask, vals)
+
+
 def codec_aggregate(vals, scales, mask, block_rows: int | None = None,
                     interpret: bool = False):
     """ONE fused launch: ``(K, rows, LANES)`` encoded cohort -> the
@@ -54,22 +86,23 @@ def codec_aggregate(vals, scales, mask, block_rows: int | None = None,
     ``rows`` ≤ :data:`DEFAULT_BLOCK_ROWS` on TPU, the whole buffer as
     ONE block in interpret mode.
     """
-    k, rows, _ = vals.shape
-    if block_rows is None:
-        block_rows = rows if interpret else DEFAULT_BLOCK_ROWS
-    block_rows = min(block_rows, rows)
-    while rows % block_rows != 0:
-        block_rows -= 1
-    scales = jnp.asarray(scales, jnp.float32).reshape(k, 1)
-    mask = jnp.asarray(mask, jnp.float32).reshape(k, 1)
-    kspec = pl.BlockSpec((k, 1), lambda i: (0, 0))
-    vspec = pl.BlockSpec((k, block_rows, LANES), lambda i: (0, i, 0))
-    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
-    return pl.pallas_call(
-        _agg_kernel,
-        grid=(rows // block_rows,),
-        in_specs=[kspec, kspec, vspec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
-        interpret=interpret,
-    )(scales, mask, vals)
+    return _launch_agg(_agg_kernel, vals, scales, mask, block_rows,
+                       interpret)
+
+
+def codec_aggregate_partial(vals, scales, mask,
+                            block_rows: int | None = None,
+                            interpret: bool = False):
+    """Per-shard HALF of the sharded aggregate: ONE fused launch over
+    this shard's ``(K_local, rows, LANES)`` cohort slice returning the
+    raw masked dequantized SUM (no count normalization).
+
+    Inside a ``shard_map``-ed round body each shard launches this on its
+    K/D clients; the partial sums and the local mask counts are then
+    ``psum``-ed over the mesh axis and divided exactly once, so the
+    sharded aggregate equals :func:`codec_aggregate` on the full cohort
+    to float-association order (tests/test_kernels.py pins the oracle;
+    tests/test_sharding.py pins mesh8-vs-mesh1 end to end).
+    """
+    return _launch_agg(_agg_sum_kernel, vals, scales, mask, block_rows,
+                       interpret)

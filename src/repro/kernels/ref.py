@@ -55,6 +55,14 @@ def codec_aggregate_ref(vals, scales, mask):
     return (vals.astype(jnp.float32) * w).sum(axis=0) / cnt
 
 
+def codec_aggregate_partial_ref(vals, scales, mask):
+    """Masked dequantized SUM (no normalization) — oracle for the
+    per-shard partial launch ``codec_aggregate_partial``."""
+    w = (jnp.asarray(scales, jnp.float32)
+         * jnp.asarray(mask, jnp.float32))[:, None, None]
+    return (vals.astype(jnp.float32) * w).sum(axis=0)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """Materialized-scores attention.  q,k,v: (B, H, S|T, hd)."""
     B, H, S, hd = q.shape

@@ -14,9 +14,20 @@ Checks, all at atol 1e-5 over 3 rounds with injected selections:
 - one non-ideal scenario (``bernoulli`` availability) under both
   drivers — masked aggregation via psum collectives — including the
   realized ``effective_k`` telemetry;
+- every wire codec (int8 / topk / dp_gauss) under both drivers,
+  ``mesh_devices=8`` vs ``1`` — the per-shard partial dequantize +
+  psum path, including top-k error-feedback carry;
+- ``bytes_up``/``bytes_down`` telemetry under a thinned bernoulli
+  round with a codec: counted once globally, not once per shard;
+- the buffered async driver on the 8-way mesh: degenerate parity vs
+  the python driver, a non-divisible commit cohort (masked padded
+  lanes) with a codec, and duplicate arrivals under a control-variate
+  spec (sequential occurrence layers);
+- the scanned driver's replicated fallback when the client-state axis
+  does not divide the mesh: still correct, ``sharded: 0.0`` telemetry;
 - ``mesh_devices="auto"`` resolves to the full 8-way mesh;
 - the error paths that need >1 device: indivisible selection size and
-  the loop-engine conflict.
+  the config-time loop-engine conflict.
 
 Prints ``SHARDED-PARITY-OK`` on success; any failure raises (nonzero
 exit) with the offending algorithm in the message.
@@ -117,6 +128,114 @@ def main() -> None:
         print(f"ok bernoulli {driver}: params {dmax:.2e} "
               f"eff_k {h8['effective_k']}")
 
+    # wire codecs on the mesh: per-shard partial dequantize-aggregate
+    # + psum, both drivers, vs the identical single-device program.
+    # topk carries persistent error-feedback state (dev-sharded), so
+    # 3 rounds also pin the EF writeback under sharding.
+    for codec in ("int8", "topk", "dp_gauss"):
+        for driver in ("python", "scan"):
+            h1, f1 = run("feddane", 1, driver=driver, codec=codec)
+            h8, f8 = run("feddane", 8, driver=driver, codec=codec)
+            dmax = leaves_maxdiff(f1, f8)
+            ldiff = float(np.abs(np.asarray(h1["loss"])
+                                 - np.asarray(h8["loss"])).max())
+            assert dmax < ATOL and ldiff < ATOL, (
+                f"{codec}/{driver}: sharded codec round diverged "
+                f"(params {dmax:.2e}, loss {ldiff:.2e})")
+            print(f"ok codec {codec} {driver}: params {dmax:.2e} "
+                  f"loss {ldiff:.2e}")
+
+    # bytes telemetry is a GLOBAL count: under a thinned bernoulli
+    # round the effective-k-dependent uplink bytes must match the
+    # single-device run exactly, not be multiplied (or split) per
+    # shard — the mesh analogue of the PR-8 thinned-gather fix.
+    for codec in ("topk", "int8"):
+        h1, _ = run("feddane", 1, codec=codec,
+                    scenario="bernoulli", avail_prob=0.6)
+        h8, _ = run("feddane", 8, codec=codec,
+                    scenario="bernoulli", avail_prob=0.6)
+        assert h1["bytes_up"] == h8["bytes_up"], (
+            f"{codec}: bytes_up diverged under mesh "
+            f"{h1['bytes_up']} vs {h8['bytes_up']}")
+        assert h1["bytes_down"] == h8["bytes_down"], (
+            f"{codec}: bytes_down diverged under mesh "
+            f"{h1['bytes_down']} vs {h8['bytes_down']}")
+        print(f"ok bytes {codec}: up {h8['bytes_up']}")
+
+    # the scanned driver keeps sharded layout telemetry honest: N=16
+    # divides the 8-mesh -> every round reports sharded 1.0
+    h8, _ = run("feddane", 8, driver="scan")
+    assert h8["sharded"] == [1.0] * ROUNDS, h8["sharded"]
+    print("ok scan sharded telemetry 1.0")
+
+    # N % D != 0: replicated client-state fallback — correct results
+    # (vs mesh=1) and sharded: 0.0 telemetry, not a crash
+    ds12 = make_synthetic(1, 1, num_devices=12, seed=0)
+    sel12 = np.stack([np.stack([(np.arange(K) + t) % 12,
+                                (np.arange(K) + t + 4) % 12])
+                      for t in range(ROUNDS)])
+
+    def run12(mesh_devices):
+        cfg = FederatedConfig(
+            algorithm="scaffold", num_devices=12, devices_per_round=K,
+            local_epochs=2, learning_rate=0.01, mu=0.001, seed=3,
+            engine="batched", round_driver="scan",
+            chunk_rounds=ROUNDS, mesh_devices=mesh_devices)
+        tr = FederatedTrainer(logreg_loss, ds12, cfg)
+        return tr.run(params, ROUNDS, selections=sel12)
+
+    h1, f1 = run12(1)
+    h8, f8 = run12(8)
+    dmax = leaves_maxdiff(f1, f8)
+    assert dmax < ATOL, f"replicated fallback diverged ({dmax:.2e})"
+    assert h8["sharded"] == [0.0] * ROUNDS, h8["sharded"]
+    print(f"ok replicated fallback: params {dmax:.2e} sharded 0.0")
+
+    # buffered async driver on the mesh -------------------------------
+    def run_buf(algo, mesh_devices, selections, rounds=ROUNDS, **kw):
+        cfg = FederatedConfig(
+            algorithm=algo, num_devices=N, devices_per_round=K,
+            local_epochs=2, learning_rate=0.01, mu=0.001, seed=3,
+            round_driver="buffered", staleness_fn="constant",
+            mesh_devices=mesh_devices, **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        return tr.run(params, rounds, selections=selections)
+
+    def run_py(algo, selections, rounds=ROUNDS, **kw):
+        cfg = FederatedConfig(
+            algorithm=algo, num_devices=N, devices_per_round=K,
+            local_epochs=2, learning_rate=0.01, mu=0.001, seed=3,
+            round_driver="python", engine="loop", **kw)
+        tr = FederatedTrainer(logreg_loss, dataset, cfg)
+        return tr.run(params, rounds, selections=selections)
+
+    for algo in ("fedavg", "feddane", "scaffold"):
+        _, fp = run_py(algo, sel)
+        _, fb = run_buf(algo, 8, sel)
+        dmax = leaves_maxdiff(fp, fb)
+        assert dmax < ATOL, (
+            f"buffered mesh {algo}: degenerate parity broke "
+            f"({dmax:.2e})")
+        print(f"ok buffered mesh {algo}: params {dmax:.2e}")
+
+    # non-divisible commit cohort (buffer_size=6 over an 8-mesh) plus a
+    # codec: masked padded lanes must stay inert, loss finite
+    hb, _ = run_buf("feddane", 8, sel, buffer_size=6, codec="int8")
+    assert np.isfinite(np.asarray(hb["loss"])).all(), hb["loss"]
+    print("ok buffered mesh padded cohort + int8")
+
+    # duplicate arrivals under a control-variate spec: sequential
+    # occurrence layers on the mesh == the python driver's loop
+    sel_dup = sel[:, 0, :].copy()
+    sel_dup[:, 1] = sel_dup[:, 0]
+    _, fp = run_py("scaffold", sel_dup, sample_with_replacement=True)
+    _, fb = run_buf("scaffold", 8, sel_dup,
+                    sample_with_replacement=True)
+    dmax = leaves_maxdiff(fp, fb)
+    assert dmax < ATOL, (
+        f"buffered mesh duplicates diverged ({dmax:.2e})")
+    print(f"ok buffered mesh duplicates: params {dmax:.2e}")
+
     # error paths that need a real multi-device mesh
     cfg = FederatedConfig(algorithm="fedavg", num_devices=N,
                           devices_per_round=6, engine="batched",
@@ -128,14 +247,15 @@ def main() -> None:
         print("ok indivisible K raises")
     else:
         raise AssertionError("K=6 over an 8-mesh did not raise")
-    cfg = FederatedConfig(algorithm="fedavg", num_devices=N,
-                          devices_per_round=K, engine="loop",
-                          mesh_devices=8)
+    # the loop-engine conflict now fails at CONFIG construction
+    # (configs/base.py), before any trainer/device state exists
     try:
-        FederatedTrainer(logreg_loss, dataset, cfg)
+        FederatedConfig(algorithm="fedavg", num_devices=N,
+                        devices_per_round=K, engine="loop",
+                        mesh_devices=8)
     except ValueError as e:
-        assert "batched engine" in str(e), e
-        print("ok loop-engine conflict raises")
+        assert "loop" in str(e) and "mesh_devices" in str(e), e
+        print("ok loop-engine conflict raises at config time")
     else:
         raise AssertionError("engine='loop' + mesh did not raise")
 

@@ -184,20 +184,80 @@ def test_duplicate_client_completions(setup):
 
 
 def test_validation():
-    """Knob validation fails fast: bad staleness_fn / negative knobs at
-    config construction, incompatible spec combos at trainer build."""
+    """Knob validation fails fast AT CONFIG CONSTRUCTION: bad
+    staleness_fn / negative knobs / unknown engine and driver names /
+    the one remaining invalid composition (loop engine × mesh), each
+    with an actionable message naming the pair."""
     with pytest.raises(ValueError, match="staleness_fn"):
         FederatedConfig(staleness_fn="nope")
     with pytest.raises(ValueError, match="buffer_size"):
         FederatedConfig(buffer_size=-1)
     with pytest.raises(ValueError, match="max_staleness"):
         FederatedConfig(max_staleness=-2)
+    with pytest.raises(ValueError, match="round_driver"):
+        FederatedConfig(round_driver="threads")
+    with pytest.raises(ValueError, match="engine"):
+        FederatedConfig(engine="vmap")
+    with pytest.raises(ValueError, match="mesh_devices"):
+        FederatedConfig(engine="loop", mesh_devices=2)
+    # the formerly-rejected composition (scaffold + replacement under
+    # the buffered driver) now BUILDS — sequential duplicate solves
+    # replaced the ValueError (parity pinned below)
     ds = make_synthetic(0.5, 0.5, num_devices=4, seed=0)
     cfg = FederatedConfig(algorithm="scaffold", round_driver="buffered",
                           sample_with_replacement=True, num_devices=4,
                           devices_per_round=2)
-    with pytest.raises(ValueError, match="sequential"):
-        FederatedTrainer(logreg_loss, ds, cfg)
+    assert FederatedTrainer(logreg_loss, ds, cfg) is not None
+
+
+def test_degenerate_parity_with_replacement(setup):
+    """scaffold + sample_with_replacement under the buffered driver:
+    duplicate arrivals within one commit window are solved in
+    sequential occurrence layers, matching the python driver's
+    per-duplicate control updates at atol 1e-5."""
+    ds, params, _ = setup
+    rng = np.random.default_rng(3)
+    sel = np.stack([rng.choice(8, 4, replace=True)
+                    for _ in range(NUM_ROUNDS)])
+    sel[:, 1] = sel[:, 0]           # guarantee duplicates every window
+    kw = dict(BASE_KW, sample_with_replacement=True)
+    for algo in ("scaffold", "fedavg"):
+        cfg_s = FederatedConfig(algorithm=algo, round_driver="python",
+                                engine="loop", **kw)
+        cfg_b = FederatedConfig(algorithm=algo, round_driver="buffered",
+                                staleness_fn="constant", **kw)
+        hist_s, p_s = FederatedTrainer(logreg_loss, ds, cfg_s).run(
+            params, NUM_ROUNDS, selections=sel)
+        hist_b, p_b = FederatedTrainer(logreg_loss, ds, cfg_b).run(
+            params, NUM_ROUNDS, selections=sel)
+        leaves_allclose(p_s, p_b, atol=1e-5)
+        np.testing.assert_allclose(hist_s["loss"], hist_b["loss"],
+                                   atol=1e-5)
+
+
+def test_duplicate_with_topk_error_feedback(setup):
+    """A client appearing twice in one commit window under the top-k
+    codec: both occurrences read the same pre-round error-feedback
+    accumulator, the writeback resolves in cohort order (last
+    occurrence wins) — exactly the python driver's _codec_aggregate
+    semantics, so degenerate parity holds including the persistent EF
+    state's effect on later rounds."""
+    ds, params, _ = setup
+    sel = np.tile(np.array([[0, 0, 2, 3]]), (NUM_ROUNDS + 2, 1))
+    kw = dict(BASE_KW, sample_with_replacement=True, codec="topk",
+              topk_frac=0.2)
+    cfg_s = FederatedConfig(algorithm="scaffold", round_driver="python",
+                            engine="loop", **kw)
+    cfg_b = FederatedConfig(algorithm="scaffold",
+                            round_driver="buffered",
+                            staleness_fn="constant", **kw)
+    hist_s, p_s = FederatedTrainer(logreg_loss, ds, cfg_s).run(
+        params, NUM_ROUNDS + 2, selections=sel)
+    hist_b, p_b = FederatedTrainer(logreg_loss, ds, cfg_b).run(
+        params, NUM_ROUNDS + 2, selections=sel)
+    leaves_allclose(p_s, p_b, atol=1e-5)
+    np.testing.assert_allclose(hist_s["loss"], hist_b["loss"],
+                               atol=1e-5)
 
 
 # -- 3. determinism + telemetry ---------------------------------------------

@@ -478,12 +478,24 @@ def test_one_shot_ef_state_covers_full_population(setup):
 
 # -- config surface ---------------------------------------------------------
 
-def test_codec_mesh_rejected(setup):
+def test_codec_mesh_composes(setup):
+    """codec × mesh is no longer rejected: the trainer builds whenever
+    enough devices exist.  On this single-device host a concrete
+    mesh_devices=2 still fails — but for the device COUNT, not the
+    codec (mesh parity itself is pinned by tests/_sharded_child.py
+    under 8 forced-host devices)."""
+    import jax
+
     ds, _ = setup
     cfg = FederatedConfig(**dict(BASE_KW, algorithm="fedavg",
                                  codec="int8", mesh_devices=2))
-    with pytest.raises(ValueError, match="mesh_devices"):
-        FederatedTrainer(logreg_loss, ds, cfg)
+    if len(jax.devices()) >= 2:
+        assert FederatedTrainer(logreg_loss, ds, cfg) is not None
+    else:
+        with pytest.raises(ValueError) as exc:
+            FederatedTrainer(logreg_loss, ds, cfg)
+        assert "device" in str(exc.value)
+        assert "codec" not in str(exc.value)
 
 
 def test_registered_codec_runs_everywhere_without_other_changes(setup):
