@@ -77,7 +77,27 @@ deterministic functions of ``cfg.seed``, so the ratio is reproducible
 across machines — ``ASYNC_COMMITS`` is deliberately NOT scaled by
 ``BENCH_SCALE`` — and ``benchmarks/regress.py --modes async_round``
 gates it against the committed trajectory.
+
+Population-scale A/B (``population_*`` rows, N in {1e3, 1e5, 1e6})
+------------------------------------------------------------------
+The streaming ``ClientShardSource`` path (data/shard_source.py) exists
+because the pre-stacked container is O(N) in memory while a round only
+touches K=10 clients.  The ``population_feddane_N*_streaming`` rows run
+a 3-round feddane scan-driver simulation against a streaming synthetic
+source and emit ``speedup`` as a MEMORY ratio: the bytes the dense
+container would hold (measured exactly at N=1e3 by generating every
+padded client stack; estimated at 1e5/1e6 as N x the mean stack bytes
+over a fixed 64-client probe) divided by the source's
+``peak_cache_bytes`` telemetry.  Client data, selections and the eval
+sample are all seed-deterministic, so the ratio reproduces across
+machines — ``regress.py --modes population`` gates it the same way the
+async grid is gated.  ``ms_per_round`` / ``peak_rss_mb`` ride along as
+ungated context (wallclock and process peak RSS are machine facts).
+At N=1e3 — the only scale where O(N) stacking is still feasible — the
+SAME streaming data is also materialized and run dense
+(``population_feddane_N1000_dense``), making the pair a true A/B.
 """
+import json
 import sys
 import time
 
@@ -87,7 +107,7 @@ import numpy as np
 from benchmarks.common import bench_entry, emit, rounds, write_bench_json
 from repro.configs.base import FederatedConfig
 from repro.core import FederatedTrainer
-from repro.data import make_synthetic
+from repro.data import make_synthetic, make_synthetic_stream
 from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
 
@@ -110,6 +130,45 @@ ASYNC_SMOKE_ALGOS = ("fedavg", "fedavgm", "fedprox", "feddane",
                      "feddane_pipelined", "scaffold", "sdane")
 ASYNC_TELEMETRY = ("staleness_mean", "staleness_max", "buffer_wait",
                    "anchor_age", "sim_time")
+
+# population grid: fixed N sweep / cohort / round count (NOT
+# BENCH_SCALE-scaled — the gated speedup is a deterministic memory
+# ratio, see module docstring)
+POP_N_SWEEP = (1_000, 100_000, 1_000_000)
+POP_K = 10
+POP_ROUNDS = 3
+POP_PROBE = 64
+POP_SOURCE_KW = dict(alpha=1.0, beta=1.0, seed=7, eval_clients=32)
+
+
+def _pop_source(n: int):
+    return make_synthetic_stream(num_devices=n, **POP_SOURCE_KW)
+
+
+def _stack_bytes(batches) -> int:
+    """Bytes of one client's padded batch stack (the unit the dense
+    container holds N of and the streaming cache holds ~K of)."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(batches))
+
+
+def _dense_container_bytes(n: int):
+    """(bytes, method) the pre-stacked container would hold at N.
+
+    Measured exactly (every padded client stack generated) when N is
+    small enough to do so; otherwise estimated as N x the mean stack
+    bytes over a fixed probe sample.  Both paths are a pure function of
+    the source seed, so the emitted memory ratio is deterministic."""
+    src = _pop_source(n)
+    if n <= 1_000:
+        total = sum(_stack_bytes(src.device_batches(k))
+                    for k in range(n))
+        return float(total), "measured"
+    ids = np.random.default_rng(123).choice(n, size=POP_PROBE,
+                                            replace=False)
+    mean = np.mean([_stack_bytes(src.device_batches(int(k)))
+                    for k in ids])
+    return float(mean * n), "sampled"
 
 
 def time_rounds(algo: str, engine: str, dataset, params, k: int,
@@ -279,6 +338,37 @@ def smoke():
                      "final_loss": float(hist["loss"][-1]),
                      "bytes_up": hist["bytes_up"],
                      "bytes_down": hist["bytes_down"]})
+    # streaming-source smoke: one population-scale cohort-on-demand run
+    # (N=1e5 streaming synthetic, scan driver) asserting the shard
+    # source's telemetry contract — only the touched cohorts plus the
+    # bounded eval sample are ever materialized, and the LRU cache
+    # never grows toward N
+    n_stream = 100_000
+    src = make_synthetic_stream(1.0, 1.0, num_devices=n_stream, seed=7,
+                                eval_clients=32)
+    cfg = FederatedConfig(
+        algorithm="feddane", num_devices=n_stream, devices_per_round=4,
+        local_epochs=1, local_batch_size=10, learning_rate=0.01,
+        mu=0.001, seed=1, engine="batched", round_driver="scan",
+        client_source="streaming", chunk_rounds=2)
+    tr = FederatedTrainer(logreg_loss, src, cfg)
+    t0 = time.time()
+    hist, final = tr.run(params, 2, eval_every=1)
+    jax.block_until_ready(final)
+    name = f"bench_smoke_streaming_feddane_N{n_stream}"
+    st = src.stats()
+    assert np.isfinite(hist["loss"]).all(), f"{name}: non-finite loss"
+    # eval sample (32) + rounds x feddane's TWO cohorts (nsel=2) x K
+    assert st["materialized_clients"] <= 32 + 2 * 2 * 4, \
+        f"{name}: source materialized beyond cohort+eval: {st}"
+    assert 0 < st["peak_cache_bytes"] < 64e6, \
+        f"{name}: cache not bounded: {st}"
+    rows.append({"name": name, "wall_s": time.time() - t0,
+                 "rounds": 2, "backend": jax.default_backend(),
+                 "num_devices": n_stream,
+                 "final_loss": float(hist["loss"][-1]),
+                 "materialized_clients": int(st["materialized_clients"]),
+                 "peak_cache_bytes": int(st["peak_cache_bytes"])})
     # sharded smoke: with a multi-device host (CI runs this job under
     # the 8-way forced-host flag) one full-mesh feddane run exercises
     # the shard_map round + psum aggregation end to end; asserted
@@ -426,6 +516,81 @@ def async_ab(params, entries: list) -> None:
             staleness_max=float(np.max(hist_b["staleness_max"]))))
 
 
+def population_ab(params, entries: list) -> None:
+    """Dense-vs-streaming memory A/B over the population N sweep.
+
+    One streaming row per N (plus the dense half at N=1e3, the only
+    scale where O(N) stacking is feasible); ``speedup`` on the
+    streaming rows is the deterministic memory ratio the regression
+    gate holds (``--modes population``) — see the module docstring.
+    """
+    import resource
+    backend = jax.default_backend()
+    # streaming rows FIRST: ru_maxrss is process-monotone, and the
+    # dense half deliberately pays the O(N * nb_max) stacking blowup —
+    # run it last so the streaming rows' peak_rss_mb reflects the
+    # streaming path, not the dense run's high-water mark
+    for n in POP_N_SWEEP:
+        kw = dict(algorithm="feddane", num_devices=n,
+                  devices_per_round=POP_K, local_epochs=1,
+                  local_batch_size=10, learning_rate=0.05, mu=0.01,
+                  seed=5, engine="batched", round_driver="scan",
+                  chunk_rounds=POP_ROUNDS)
+        dense_bytes, method = _dense_container_bytes(n)
+        src = _pop_source(n)
+        cfg = FederatedConfig(client_source="streaming", **kw)
+        tr = FederatedTrainer(logreg_loss, src, cfg)
+        t0 = time.time()
+        hist, final = tr.run(params, POP_ROUNDS, eval_every=POP_ROUNDS)
+        jax.block_until_ready(final)
+        wall = time.time() - t0
+        st = src.stats()
+        rss_mb = (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                  / 1024.0)
+        speedup = dense_bytes / max(st["peak_cache_bytes"], 1.0)
+        emit(f"population_feddane_N{n}_streaming", wall / POP_ROUNDS,
+             f"{wall / POP_ROUNDS * 1e3:.1f} ms/round "
+             f"cache={st['peak_cache_bytes'] / 1e6:.2f}MB "
+             f"mem_ratio={speedup:.0f}x rss={rss_mb:.0f}MB")
+        entries.append(bench_entry(
+            f"population_feddane_N{n}_streaming", mode="population",
+            driver="scan", k=POP_K,
+            ms_per_round=wall / POP_ROUNDS * 1e3, algo="feddane",
+            rounds=POP_ROUNDS, num_devices=n,
+            client_source="streaming",
+            dense_bytes=round(dense_bytes), dense_bytes_method=method,
+            peak_cache_bytes=round(st["peak_cache_bytes"]),
+            materialized_clients=int(st["materialized_clients"]),
+            peak_rss_mb=round(rss_mb, 1),
+            final_loss=float(hist["loss"][-1]),
+            speedup=round(speedup, 3)))
+    # the dense half of the A/B, feasible only at the smallest N: the
+    # SAME streaming data, materialized and run through the stacked
+    # scan path
+    n = POP_N_SWEEP[0]
+    dense_bytes, _ = _dense_container_bytes(n)
+    dense_ds = _pop_source(n).materialize()
+    cfg = FederatedConfig(
+        algorithm="feddane", num_devices=n, devices_per_round=POP_K,
+        local_epochs=1, local_batch_size=10, learning_rate=0.05,
+        mu=0.01, seed=5, engine="batched", round_driver="scan",
+        chunk_rounds=POP_ROUNDS, client_source="stacked")
+    tr = FederatedTrainer(logreg_loss, dense_ds, cfg)
+    t0 = time.time()
+    hist, final = tr.run(params, POP_ROUNDS, eval_every=POP_ROUNDS)
+    jax.block_until_ready(final)
+    wall = time.time() - t0
+    emit(f"population_feddane_N{n}_dense", wall / POP_ROUNDS,
+         f"{wall / POP_ROUNDS * 1e3:.1f} ms/round "
+         f"container={dense_bytes / 1e6:.1f}MB backend={backend}")
+    entries.append(bench_entry(
+        f"population_feddane_N{n}_dense", mode="population",
+        driver="scan", k=POP_K, ms_per_round=wall / POP_ROUNDS * 1e3,
+        algo="feddane", rounds=POP_ROUNDS, num_devices=n,
+        client_source="stacked", dense_bytes=round(dense_bytes),
+        final_loss=float(hist["loss"][-1])))
+
+
 def main():
     dataset = make_synthetic(1, 1, num_devices=30, seed=0)
     params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
@@ -472,6 +637,7 @@ def main():
             speedup=round(speedup, 3)))
     sharded_ab(params, timed, entries)
     async_ab(params, entries)
+    population_ab(params, entries)
     write_bench_json(BENCH_JSON, entries)
 
 
@@ -484,11 +650,35 @@ def main_async_only(out: str = BENCH_JSON) -> None:
     write_bench_json(out, entries)
 
 
+def main_population_only(out: str = BENCH_JSON,
+                         merge: str = None) -> None:
+    """Emit ONLY the ``population`` grid (CI's second deterministic
+    gate path).  With ``merge``, the population rows REPLACE the
+    ``mode == "population"`` entries of an existing bench JSON while
+    every other mode's entries are carried over verbatim — the recipe
+    for refreshing the committed ``benchmarks/BENCH_round.json``
+    without rerunning the wallclock sweeps."""
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    entries = []
+    population_ab(params, entries)
+    if merge is not None:
+        with open(merge) as f:
+            doc = json.load(f)
+        entries = [e for e in doc["entries"]
+                   if e.get("mode") != "population"] + entries
+    write_bench_json(out, entries)
+
+
 if __name__ == "__main__":
+    out = BENCH_JSON
+    if "--out" in sys.argv:
+        out = sys.argv[sys.argv.index("--out") + 1]
     if "--async-only" in sys.argv:
-        out = BENCH_JSON
-        if "--out" in sys.argv:
-            out = sys.argv[sys.argv.index("--out") + 1]
         main_async_only(out)
+    elif "--population-only" in sys.argv:
+        merge = None
+        if "--merge-into" in sys.argv:
+            merge = sys.argv[sys.argv.index("--merge-into") + 1]
+        main_population_only(out, merge)
     else:
         main()

@@ -9,8 +9,10 @@ roofline.  Prints ``name,us_per_call,derived`` CSV rows.
 algorithm in the strategy registry under both round drivers (python +
 scan) that must complete with finite losses — plus one buffered-driver
 (async event-queue) run per algorithm family with the staleness
-telemetry asserted finite, and, on multi-device hosts (CI's 8-way
-forced-host step), one mesh-sharded run.  It prints
+telemetry asserted finite, one population-scale streaming-source run
+(N=1e5, cohort-on-demand, cache telemetry asserted bounded), and, on
+multi-device hosts (CI's 8-way forced-host step), one mesh-sharded
+run.  It prints
 one timing line and writes a JSON artifact, so a regression on the
 benchmark path — or a registered spec that breaks a driver — fails CI
 instead of lurking until the next full benchmark run.
@@ -42,7 +44,10 @@ def smoke(out_path: str) -> None:
                      if r["name"].startswith("bench_smoke_buffered_")]
     codec_rows = [r for r in rows
                   if r["name"].startswith("bench_smoke_codec_")]
-    special = scenario_rows + sharded_rows + buffered_rows + codec_rows
+    streaming_rows = [r for r in rows
+                      if r["name"].startswith("bench_smoke_streaming_")]
+    special = (scenario_rows + sharded_rows + buffered_rows
+               + codec_rows + streaming_rows)
     algos = sorted({r["name"].replace("bench_smoke_", "")
                     .rsplit("_", 1)[0] for r in rows
                     if r not in special})
@@ -51,7 +56,8 @@ def smoke(out_path: str) -> None:
           f"scenario_runs={len(scenario_rows)} "
           f"sharded_runs={len(sharded_rows)} "
           f"buffered_runs={len(buffered_rows)} "
-          f"codec_runs={len(codec_rows)} runs={len(rows)} "
+          f"codec_runs={len(codec_rows)} "
+          f"streaming_runs={len(streaming_rows)} runs={len(rows)} "
           f"rounds={rows[0]['rounds']} "
           f"backend={rows[0]['backend']} out={out_path} ok")
 

@@ -256,6 +256,24 @@ class FederatedConfig:
     # XLA_FLAGS=--xla_force_host_platform_device_count=8).  Requires
     # the batched engine and a selection size divisible by the mesh.
     mesh_devices: int | str = 1
+    # hierarchical aggregation tree (core/sharding.py): group the
+    # mesh_devices leaf devices into this many edge aggregators — the
+    # client mesh becomes 2-D (edge, device) and every cross-client
+    # reduction runs as NESTED collectives (leaf devices psum within
+    # their edge, edges psum to the server) instead of one flat
+    # collective.  1 (default) keeps the exact 1-D mesh, bit-identical;
+    # must divide the resolved mesh_devices.  Equal shard sizes make
+    # the tree mean-of-means exact (parity: tests/_sharded_child.py).
+    edge_shards: int = 1
+    # client data source (data/shard_source.py): "stacked" forces the
+    # dense pre-stacked layout (all-N batch tensors, the pre-PR-10
+    # programs), "streaming" forces cohort-on-demand fetching from a
+    # ClientShardSource (population scale: memory is O(K), not O(N)),
+    # "auto" (default) follows the dataset — streaming iff it declares
+    # ``streaming = True``.  Affects which ScannedDriver program is
+    # built; the host loop and buffered driver are cohort-based either
+    # way.
+    client_source: str = "auto"
     # federated environment (core/scenarios.py): any registered
     # ScenarioSpec name.  "ideal" (always-on devices, no stragglers,
     # full work) is structurally a no-op — every path keeps its exact
@@ -387,6 +405,25 @@ class FederatedConfig:
             raise ValueError(
                 f"mesh_devices must be a positive int or 'auto', got "
                 f"{self.mesh_devices!r}")
+        if not (isinstance(self.edge_shards, int)
+                and not isinstance(self.edge_shards, bool)
+                and self.edge_shards >= 1):
+            raise ValueError(
+                f"edge_shards must be a positive int, got "
+                f"{self.edge_shards!r}")
+        if (isinstance(self.mesh_devices, int)
+                and not isinstance(self.mesh_devices, bool)
+                and self.edge_shards > 1
+                and self.mesh_devices % self.edge_shards != 0):
+            # "auto" resolves at trainer build; core.sharding re-checks
+            raise ValueError(
+                f"edge_shards={self.edge_shards} must divide "
+                f"mesh_devices={self.mesh_devices} (each edge "
+                f"aggregates an equal leaf-device group)")
+        if self.client_source not in ("auto", "stacked", "streaming"):
+            raise ValueError(
+                f"unknown client_source {self.client_source!r}; choose "
+                f"from auto/stacked/streaming")
 
 
 def one_shot_config(num_devices: int, *, local_epochs: int = 50,

@@ -208,8 +208,7 @@ class BufferedDriver(object):
         # psum-ed weighted mean).  mesh_devices=1 builds no mesh and
         # every program below is structurally the pre-mesh build.
         self.mesh = sharding.mesh_for(cfg)
-        self._shards = (self.mesh.shape[sharding.DEVICE_AXIS]
-                        if self.mesh is not None else 1)
+        self._shards = sharding.num_shards(self.mesh)
         self._m_pad = -(-self._m // self._shards) * self._shards
         self.rng = np.random.default_rng(cfg.seed)
         self._solver = make_batched_solver(
@@ -217,13 +216,16 @@ class BufferedDriver(object):
             num_epochs=cfg.local_epochs, with_cutoff=self._has_work,
             solver=cfg.local_solver)
         if self.mesh is not None:
-            dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+            dev = sharding.stacked_spec(self.mesh)
+            rep = sharding.replicated_spec()
+            manual = sharding.axis_name_tuple(
+                sharding.mesh_axes(self.mesh))
             in_specs = (rep, dev, rep, dev, dev)
             if self._has_work:
                 in_specs += (dev,)
             self._jsolve = jax.jit(shard_map_compat(
                 self._solver, self.mesh, in_specs=in_specs,
-                out_specs=dev, manual_axes=(sharding.DEVICE_AXIS,)))
+                out_specs=dev, manual_axes=manual))
         else:
             self._jsolve = jax.jit(self._solver)
         self._grads = jax.jit(make_batched_grad_fn(loss_fn))
@@ -248,7 +250,10 @@ class BufferedDriver(object):
         opt = self._server_opt
         codec, cfg = self._codec, self.cfg
         mesh = self.mesh
-        axis = sharding.DEVICE_AXIS if mesh is not None else None
+        # one axis name on the flat mesh, the (edge, device) tuple on
+        # the aggregation tree — aggregate_buffered reduces through
+        # sharding.tree_psum either way
+        axis = sharding.mesh_axes(mesh)
         self._commit_takes_key = (not self._codec_trivial
                                   and codec.post_aggregate is not None)
 
@@ -270,13 +275,14 @@ class BufferedDriver(object):
                                           opt_state)
 
         if mesh is not None:
-            dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+            dev = sharding.stacked_spec(mesh)
+            rep = sharding.replicated_spec()
             in_specs = (rep, rep, dev, dev)
             if self._commit_takes_key:
                 in_specs += (rep, rep)
             commit = shard_map_compat(
                 commit, mesh, in_specs=in_specs, out_specs=(rep, rep),
-                manual_axes=(sharding.DEVICE_AXIS,))
+                manual_axes=sharding.axis_name_tuple(axis))
         return jax.jit(commit)
 
     # -- sampling / environment -------------------------------------------

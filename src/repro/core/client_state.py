@@ -1,0 +1,132 @@
+"""Sparse per-client persistent state keyed by client id.
+
+SCAFFOLD control variates and top-k codec error-feedback slabs are
+*per-client* state that must persist across rounds.  The host loop used
+to carry them as a dense length-N list of zero pytrees and the scan
+driver as a dense ``(N, ...)`` stacked carry — both O(N) allocations
+that are memory-impossible at population scale (N=1e6 clients x a
+model-sized pytree each).
+
+:class:`SparseClientState` is the population-scale replacement: a dict
+keyed by client id over a shared immutable zero template.  Reads of
+never-written clients return the template (exactly the dense layout's
+zeros — jax arrays are immutable, so sharing one buffer is safe);
+writes insert only the touched rows.  Memory is O(distinct clients
+ever selected), not O(N).
+
+The dense-equivalence contract — any interleaving of reads, writes,
+gathers, scatters, and evictions produces exactly what the dense
+length-N carry would — is property-tested in tests/test_population.py
+(eviction corresponds to resetting the dense row to zeros, which is
+how stale clients are reclaimed at population scale).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+
+
+class SparseClientState:
+    """Dict-of-pytrees with a zero default, dense-list compatible.
+
+    Supports the exact access patterns of the host loop and buffered
+    driver (``st[k]``, ``st[k] = v``, ``st.get(k, default)``) plus the
+    stacked gather/scatter the engines use, so it drops in wherever a
+    ``[zeros] * N`` list used to live.
+    """
+
+    def __init__(self, num_clients: int, template: Any):
+        """``template``: the zero pytree a never-written client reads
+        (shared, never mutated); ``num_clients`` bounds valid ids."""
+        self.num_clients = int(num_clients)
+        self.template = template
+        self._store: Dict[int, Any] = {}
+        #: high-water mark of concurrently stored clients — the
+        #: population memory tests assert this stays O(cohorts), not
+        #: O(N)
+        self.peak_clients = 0
+
+    # -- dense-list compatible access ---------------------------------
+
+    def _check(self, k: int) -> int:
+        k = int(k)
+        if not 0 <= k < self.num_clients:
+            raise IndexError(
+                f"client id {k} out of range [0, {self.num_clients})")
+        return k
+
+    def __getitem__(self, k: int) -> Any:
+        return self._store.get(self._check(k), self.template)
+
+    def get(self, k: int, default: Any = None) -> Any:
+        """Dict-style read; unlike ``[]`` the default for an unwritten
+        client is the caller's, matching the buffered driver idiom."""
+        return self._store.get(self._check(k), default)
+
+    def __setitem__(self, k: int, value: Any) -> None:
+        self._store[self._check(k)] = value
+        self.peak_clients = max(self.peak_clients, len(self._store))
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __iter__(self):
+        """Dense iteration order — row k for every client id (an O(N)
+        walk; parity tests at small N use it, population code must
+        not)."""
+        for k in range(self.num_clients):
+            yield self[k]
+
+    def __contains__(self, k: int) -> bool:
+        return int(k) in self._store
+
+    def keys(self):
+        return self._store.keys()
+
+    def evict(self, k: int) -> None:
+        """Reclaim client k's row — equivalent to resetting the dense
+        row to zeros (subsequent reads return the template)."""
+        self._store.pop(self._check(k), None)
+
+    # -- stacked gather/scatter (engine cohorts) ----------------------
+
+    def gather(self, ids: Iterable[int]) -> Any:
+        """The cohort's rows stacked along a new leading axis — the
+        engine-side layout (``(K, ...)`` leaves)."""
+        import jax.numpy as jnp
+        rows = [self[int(k)] for k in ids]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+
+    def scatter(self, ids: Iterable[int], stacked: Any) -> None:
+        """Write a ``(K, ...)``-stacked cohort result back row by row.
+        Duplicate ids apply sequentially (last writer wins), matching
+        the dense scatter used under sampling with replacement."""
+        for i, k in enumerate(ids):
+            self[int(k)] = jax.tree_util.tree_map(
+                lambda x, i=i: x[i], stacked)
+
+    # -- dense bridges (property tests, small N) ----------------------
+
+    def to_dense(self) -> List[Any]:
+        """The equivalent dense length-N list — O(N), small N only."""
+        return [self[k] for k in range(self.num_clients)]
+
+    @classmethod
+    def from_dense(cls, rows: List[Any],
+                   template: Optional[Any] = None) -> "SparseClientState":
+        """Build from a dense list (rows equal to ``template`` stay
+        unstored; ``template`` defaults to zeros like row 0)."""
+        import jax.numpy as jnp
+        from repro.core import pytree as pt
+        if template is None:
+            template = pt.zeros_like(rows[0])
+        st = cls(len(rows), template)
+        for k, row in enumerate(rows):
+            same = all(
+                bool(jnp.array_equal(a, b))
+                for a, b in zip(jax.tree_util.tree_leaves(row),
+                                jax.tree_util.tree_leaves(template)))
+            if not same:
+                st[k] = row
+        return st

@@ -233,8 +233,10 @@ def decode_aggregate(spec: CodecSpec, cfg, key, agg, count):
 def init_ef(spec: CodecSpec, fspec, num_devices: int, *, stacked: bool):
     """Zero-initialized persistent error-feedback state for ``fspec``
     (a ``kernels.flatpack.FlatSpec``): ``None`` for stateless codecs, a
-    stacked ``(N, rows, 128)`` array for the scanned carry, else a list
-    of N ``(rows, 128)`` buffers (host loop / batched engine).
+    stacked ``(N, rows, 128)`` array for the scanned carry, else a
+    :class:`~repro.core.client_state.SparseClientState` of
+    ``(rows, 128)`` slabs keyed by client id (host loop / batched /
+    buffered / streaming paths — O(clients touched) memory).
     """
     if not spec.error_feedback:
         return None
@@ -242,7 +244,9 @@ def init_ef(spec: CodecSpec, fspec, num_devices: int, *, stacked: bool):
     shape = (fspec.rows, LANES)
     if stacked:
         return jnp.zeros((num_devices,) + shape, jnp.float32)
-    return [jnp.zeros(shape, jnp.float32) for _ in range(num_devices)]
+    from repro.core.client_state import SparseClientState
+    return SparseClientState(num_devices,
+                             jnp.zeros(shape, jnp.float32))
 
 
 def round_bytes(algo_spec, codec: CodecSpec, cfg, n_elems: int,

@@ -98,20 +98,53 @@ computed from the traced round index, and per-round ``comm_rounds`` is
 reconstructed host-side (it is a deterministic ``comm_per_round * t``
 ramp).
 
-Mesh-sharded rounds
--------------------
+Mesh-sharded rounds and the aggregation tree
+--------------------------------------------
 Both the per-round program and the scanned chunk program optionally run
-their stacked client axis over a 1-D JAX mesh (``core/sharding.py``;
+their stacked client axis over a JAX mesh (``core/sharding.py``;
 ``FederatedConfig.mesh_devices``): the generic round body is wrapped in
 ``shard_map`` (``_shard_wrap``) so each of the D mesh devices solves
 K/D clients, with every cross-client reduction — ``mean_k``, the masked
 scenario reductions, the server pseudo-gradient aggregate, control
-deltas, telemetry counts — expressed as psum/pmean collectives.  The
-whole round (or whole chunk of rounds) stays ONE jitted SPMD program;
-K must divide evenly over the mesh (checked early, with a clear error)
-so sharded aggregation is exactly the K-mean.  ``mesh_devices=1``
-builds no mesh: every program in this module is then structurally the
-pre-mesh build, bit-identical.  Parity gate: tests/test_sharding.py.
+deltas, telemetry counts — expressed as psum/pmean collectives.  With
+``FederatedConfig.edge_shards > 1`` the mesh is the 2-D hierarchical
+aggregation tree (``(edge, device)`` axes) and every one of those
+collectives becomes the nested leaf→edge→server reduction via
+``sharding.tree_psum`` / ``tree_pmean`` — the engine code is axis-name
+generic, so flat and tree meshes run the same body.  The whole round
+(or whole chunk of rounds) stays ONE jitted SPMD program; K must
+divide evenly over the mesh (checked early, with a clear error) so
+sharded aggregation is exactly the K-mean.  ``mesh_devices=1`` builds
+no mesh: every program in this module is then structurally the
+pre-mesh build, bit-identical.  Parity gates: tests/test_sharding.py,
+tests/_sharded_child.py (tree vs flat vs no-mesh).
+
+Population-scale streaming (``ClientShardSource``)
+--------------------------------------------------
+``ScannedDriver`` has two data plans, switched by
+``FederatedConfig.client_source`` (``data/shard_source.py``'s
+``resolve_streaming``):
+
+- **stacked** (the pre-population plan): ALL N clients' padded batch
+  tensors are materialized once up front and each round gathers K rows
+  on device.  O(N) memory — fine to a few thousand clients, impossible
+  at N=1e6.
+- **streaming**: nothing O(N) is ever materialized.  The host
+  replicates the scan body's exact PRNG key-split schedule (same
+  ``jax.random`` ops, eagerly), so per-round selections and scenario
+  uniforms are bit-identical to the stacked scan; it then materializes
+  ONLY the selected cohorts' batches from the
+  :class:`~repro.data.shard_source.ClientShardSource` and feeds them
+  through the scan's ``xs`` (padded to a chunk-wide bucketed batch
+  count — padding rides ``valid=0`` masked identity steps, so
+  trajectories match the stacked gather exactly).  Per-client
+  persistent state (SCAFFOLD controls, codec error feedback) lives in
+  host-side :class:`~repro.core.client_state.SparseClientState` stores:
+  cohort rows ride ``xs`` in, updated rows ride the scan outputs back,
+  and the host scatters them — a chunk is truncated at the first
+  within-chunk cohort repeat so state reads never go stale.  Memory is
+  O(K · chunk_rounds + eval sample), independent of N; parity with the
+  stacked plan is pinned in tests/test_population.py.
 """
 from __future__ import annotations
 
@@ -134,6 +167,7 @@ from repro.core.strategies import (AlgorithmSpec, ControlCtx, CorrCtx,
                                    algorithm_spec, init_aux,
                                    make_server_opt, runtime_state_fields)
 from repro.data.batching import stack_device_batches, stack_eval_batches
+from repro.data.shard_source import resolve_streaming
 from repro.kernels.codec import codec_aggregate, codec_aggregate_partial
 from repro.kernels.flatpack import (LANES, flat_spec, pack_broadcast,
                                     pack_stacked, unpack)
@@ -277,13 +311,14 @@ class RoundEngine:
         n_dev = float(self.num_devices or 0)
         # Under a mesh the body below runs PER SHARD inside shard_map:
         # stacked leaves hold K/shards clients, cross-client reductions
-        # go through psum/pmean over `axis`, and trace-static global
-        # counts are local_count * shards.  axis=None (no mesh) keeps
-        # every expression exactly pre-mesh.
+        # go through tree_psum/tree_pmean over `axis` (one name on the
+        # flat 1-D mesh, the (edge, device) tuple on the aggregation
+        # tree — reduced leaf-to-edge, then edge-to-server), and
+        # trace-static global counts are local_count * shards.
+        # axis=None (no mesh) keeps every expression exactly pre-mesh.
         mesh = self.mesh
-        axis = sharding.DEVICE_AXIS if mesh is not None else None
-        shards = mesh.shape[sharding.DEVICE_AXIS] if mesh is not None \
-            else 1
+        axis = sharding.mesh_axes(mesh)
+        shards = sharding.num_shards(mesh)
         codec, codec_trivial = self._codec, self._codec_trivial
         interp = jax.default_backend() == "cpu"
 
@@ -301,10 +336,11 @@ class RoundEngine:
             key = aux["codec_key"]
             efs = aux.get("ef")
             # cohort slots seed per-client encode draws: under a mesh
-            # each shard offsets its local arange by axis_index * K/D so
-            # the sharded program draws exactly the unsharded slots
-            idx0 = (jax.lax.axis_index(axis) * kk if axis is not None
-                    else 0)
+            # each shard offsets its local arange by its LINEAR shard
+            # index * K/D (row-major over the tree mesh's axes) so the
+            # sharded program draws exactly the unsharded slots
+            idx0 = (sharding.linear_shard_index(axis) * kk
+                    if axis is not None else 0)
             vals, scales, ef_new = codecs.encode_stacked(
                 codec, cfg, key, deltas, efs, idx0=idx0)
             mask = (active.astype(jnp.float32) if active is not None
@@ -316,8 +352,8 @@ class RoundEngine:
                 # the fused aggregate (kernels/codec.py)
                 part = codec_aggregate_partial(vals, scales, mask,
                                                interpret=interp)
-                num = jax.lax.psum(part, axis)
-                cnt = jax.lax.psum(mask.sum(), axis)
+                num = sharding.tree_psum(part, axis)
+                cnt = sharding.tree_psum(mask.sum(), axis)
                 agg = num / jnp.maximum(cnt, 1.0)
             else:
                 agg = codec_aggregate(vals, scales, mask,
@@ -348,7 +384,7 @@ class RoundEngine:
                     zeros = pt.zeros_like(w0)
                     avail_n = active_a.sum()
                     if axis is not None:
-                        avail_n = jax.lax.psum(avail_n, axis)
+                        avail_n = sharding.tree_psum(avail_n, axis)
                     grad_ok = (avail_n > 0).astype(jnp.float32)
                 if phase_a is None:
                     # shared selection: one gradient pass serves the
@@ -424,7 +460,8 @@ class RoundEngine:
                         c_new, aux["controls"])
                     if axis is not None:
                         delta_sum = jax.tree_util.tree_map(
-                            lambda d: jax.lax.psum(d, axis), delta_sum)
+                            lambda d: sharding.tree_psum(d, axis),
+                            delta_sum)
                     new["c_server"] = jax.tree_util.tree_map(
                         lambda cs, d: cs + d / n_dev,
                         aux["c_server"], delta_sum)
@@ -448,7 +485,7 @@ class RoundEngine:
                 k = jnp.float32(valid.shape[0] * shards)
                 eff = active.sum()
                 if axis is not None:
-                    eff = jax.lax.psum(eff, axis)
+                    eff = sharding.tree_psum(eff, axis)
                 # effective_a: devices that actually served the fresh
                 # gradient gather (0 for stale/gradient-free specs) —
                 # the honest downlink/uplink count for byte telemetry
@@ -481,7 +518,8 @@ class RoundEngine:
         ``round_core``), so the whole round remains one SPMD program.
         """
         mesh = self.mesh
-        dev, rep = sharding.stacked_spec(), sharding.replicated_spec()
+        dev, rep = sharding.stacked_spec(mesh), sharding.replicated_spec()
+        manual = sharding.axis_name_tuple(sharding.mesh_axes(mesh))
 
         def wrapped(w0, aux, phase_a, batches, valid, decay,
                     active=None, work=None, active_a=None):
@@ -508,7 +546,7 @@ class RoundEngine:
                 in_specs, env = in_specs[:6], ()
             f = shard_map_compat(
                 body, mesh, in_specs=in_specs, out_specs=out_specs,
-                manual_axes=(sharding.DEVICE_AXIS,))
+                manual_axes=manual)
             return f(w0, aux, phase_a, batches, valid,
                      jnp.asarray(decay, jnp.float32), *env)
 
@@ -516,6 +554,23 @@ class RoundEngine:
             return wrapped
         return lambda w0, aux, phase_a, batches, valid, decay: \
             wrapped(w0, aux, phase_a, batches, valid, decay)
+
+
+def _pad_cohort(stacked, valid, nb: int):
+    """Pad one round's ``(K, nb_r, ...)`` cohort stack to the streaming
+    chunk's shared bucketed batch count ``nb``: batch steps cycle (the
+    extra steps ride ``valid=0`` masked identity updates), the valid
+    mask extends with zeros — so the padded trajectory is exactly the
+    unpadded one and chunk shapes stay uniform for one scan trace."""
+    cur = int(valid.shape[1])
+    if cur == nb:
+        return stacked, valid
+    idx = jnp.arange(nb) % cur
+    stacked = jax.tree_util.tree_map(lambda x: x[:, idx], stacked)
+    valid = jnp.concatenate(
+        [valid, jnp.zeros((valid.shape[0], nb - cur), valid.dtype)],
+        axis=1)
+    return stacked, valid
 
 
 def _make_stacked_eval(loss_fn: Callable, eval_batches, eval_valid,
@@ -597,32 +652,53 @@ class ScannedDriver:
         self.scn = scenario_spec(cfg.scenario)
         self.scn_trivial = is_trivial(self.scn)
         self._env_channels = env_channels(self.scn)
-        self.batches_all, self.valid_all = stack_device_batches(
-            dataset, np.arange(self.num_devices))
-        eb, ev, ew = stack_eval_batches(dataset)
+        #: population-scale data plan (module docstring): streaming
+        #: materializes selected cohorts only, per chunk, host-side.
+        #: Full-participation specs touch every client every round —
+        #: inherently materializing — so they run the stacked plan on
+        #: either source kind (a streaming source materializes through
+        #: its device_batches_padded hook; small N only).
+        self.streaming = (resolve_streaming(
+            getattr(cfg, "client_source", "auto"), dataset)
+            and self.spec.num_selections > 0)
         #: whether the all-client tensors actually shard over the mesh
         #: (False on the N % D != 0 replicated fallback) — recorded in
-        #: run-history telemetry so benchmarks can't misattribute runs
+        #: run-history telemetry so benchmarks can't misattribute runs.
+        #: Streaming never builds all-client tensors; its per-round
+        #: cohorts always shard (K % shards checked above), so a
+        #: streaming mesh run records 1.0.
         self._layout_sharded = self.mesh is not None
+        if self.streaming:
+            self.batches_all = self.valid_all = None
+        else:
+            self.batches_all, self.valid_all = stack_device_batches(
+                dataset, np.arange(self.num_devices))
+        eb, ev, ew = stack_eval_batches(dataset)
         if self.mesh is not None:
             # lay the big all-client tensors out along the mesh up
             # front (leading-axis NamedSharding when N divides evenly,
             # replicated otherwise) so the chunk program starts from
             # the layout the shard-mapped round body wants instead of
             # re-sharding per round
-            d = self.mesh.shape[sharding.DEVICE_AXIS]
-            if self.num_devices % d != 0:
-                self._layout_sharded = False
-                _warn_replicated_fallback(self.num_devices, d)
-            self.batches_all = sharding.shard_stacked(self.batches_all,
-                                                      self.mesh)
-            self.valid_all = sharding.shard_stacked(self.valid_all,
-                                                    self.mesh)
+            d = sharding.num_shards(self.mesh)
+            if not self.streaming:
+                if self.num_devices % d != 0:
+                    self._layout_sharded = False
+                    _warn_replicated_fallback(self.num_devices, d)
+                self.batches_all = sharding.shard_stacked(
+                    self.batches_all, self.mesh)
+                self.valid_all = sharding.shard_stacked(self.valid_all,
+                                                        self.mesh)
             eb = sharding.shard_stacked(eb, self.mesh)
             ev = sharding.shard_stacked(ev, self.mesh)
         self._eval_loss = _make_stacked_eval(loss_fn, eb, ev, ew)
-        self.probs = (jnp.asarray(dataset.weights, jnp.float32)
-                      if cfg.weighted_sampling else None)
+        # streaming sources publish weights=None (uniform sampling with
+        # no O(N) weight vector); dense datasets keep their size-
+        # proportional marginals
+        w = dataset.weights
+        self.probs = (jnp.asarray(w, jnp.float32)
+                      if cfg.weighted_sampling and w is not None
+                      else None)
         # selection sizing, shared by the chunk program and the
         # telemetry in run() (one definition, no drift)
         self.k_sel = (cfg.devices_per_round
@@ -633,9 +709,13 @@ class ScannedDriver:
                            else self.k_sel)
         self.comm_per_round = self.spec.comm_per_round
         self._state_fields = runtime_state_fields(self.spec, cfg)
-        # jit is lazy: each traces once per distinct chunk length.
-        self._chunk_sampled = jax.jit(self._make_chunk(inject=False))
-        self._chunk_injected = jax.jit(self._make_chunk(inject=True))
+        # jit is lazy: each traces once per distinct chunk length (and,
+        # for the streaming program, per chunk-wide batch bucket).
+        if self.streaming:
+            self._chunk_stream = jax.jit(self._make_stream_chunk())
+        else:
+            self._chunk_sampled = jax.jit(self._make_chunk(inject=False))
+            self._chunk_injected = jax.jit(self._make_chunk(inject=True))
 
     # -- scan program -----------------------------------------------------
 
@@ -778,7 +858,288 @@ class ScannedDriver:
 
         return chunk
 
+    # -- streaming program (population-scale sources) ---------------------
+
+    def _make_stream_chunk(self) -> Callable:
+        """Build the streaming ``chunk(carry, xs) -> (carry, ys)``.
+
+        Same generic round-body interpretation as ``_make_chunk``, but
+        every per-cohort input — batch stacks, per-client state rows,
+        realized scenario masks — arrives through ``xs`` (prepared
+        host-side by ``_run_streaming``) instead of being gathered
+        from O(N) carries and all-client stacks; updated state rows
+        leave through the scan outputs for the host to scatter back
+        into the sparse stores.  The carry holds ONLY global state
+        (params, g_prev, c_server, center, opt) — nothing in the
+        compiled program scales with N.
+        """
+        cfg, spec = self.cfg, self.spec
+        trivial = self.scn_trivial
+        codec = self.engine._codec
+        codec_trivial = self.engine._codec_trivial
+        round_body = (self.engine.round_body if trivial
+                      else self.engine.round_body_env)
+        has_controls = "controls" in self._state_fields
+        aux_fields = tuple(f for f in self._state_fields
+                           if f != "controls")
+
+        def body(carry, xs):
+            new = dict(carry)
+            decay = (spec.decay(cfg, xs["t"].astype(jnp.float32))
+                     if spec.decay is not None else 1.0)
+            b, v = xs["b"], xs["v"]
+            phase_a = (xs["ba"], xs["va"]) if "ba" in xs else None
+            aux = {f: carry[f] for f in aux_fields}
+            if has_controls:
+                aux["c_server"] = carry["c_server"]
+                aux["controls"] = xs["controls"]
+            if not codec_trivial:
+                aux["codec_key"] = codecs.round_key(cfg, xs["t"])
+                if codec.error_feedback:
+                    aux["ef"] = xs["ef"]
+            if trivial:
+                params, aux_new = round_body(
+                    carry["params"], aux, phase_a, b, v, decay)
+            else:
+                params, aux_new, stats = round_body(
+                    carry["params"], aux, phase_a, b, v, decay,
+                    xs["active"], xs["work"], xs.get("active_a"))
+            for f in aux_fields:
+                new[f] = aux_new[f]
+            ys = {}
+            if has_controls:
+                new["c_server"] = aux_new["c_server"]
+                ys["controls"] = aux_new["controls"]
+            if not codec_trivial and codec.error_feedback:
+                ys["ef"] = aux_new["ef"]
+            new["params"] = params
+            ys["loss"] = jax.lax.cond(
+                xs["do_eval"], self._eval_loss,
+                lambda p: jnp.float32(jnp.nan), params)
+            if not trivial:
+                ys["effective_k"] = stats["effective_k"]
+                ys["effective_a"] = stats["effective_a"]
+            return new, ys
+
+        def chunk(carry, xs):
+            return jax.lax.scan(body, carry, xs)
+
+        return chunk
+
+    def _stream_round(self, key, t: int, sel_row):
+        """Replicate ONE round of the scan body's key-split schedule
+        host-side — the same ``jax.random`` split/sample/uniform ops
+        the stacked chunk traces, run eagerly, so selections and
+        scenario draws are bit-identical to the stacked scan.
+
+        Returns ``(next_key, row)``: ``row`` carries round ``t``'s two
+        phase selections plus (non-trivial scenarios) the realized
+        ``active``/``work``/``active_a`` masks — everything is
+        cohort-sized; the transient ``(n,)`` uniforms never leave this
+        frame.
+        """
+        cfg, spec, scn = self.cfg, self.spec, self.scn
+        n, channels = self.num_devices, self._env_channels
+        env_keys = ()
+        if sel_row is not None:
+            if channels:
+                keys = jax.random.split(key, 1 + len(channels))
+                key, env_keys = keys[0], keys[1:]
+            s1, s2 = np.asarray(sel_row[0]), np.asarray(sel_row[1])
+        else:
+            keys = jax.random.split(key, 3 + len(channels))
+            s1 = np.asarray(server.sample_devices_onchip(
+                keys[1], n, self.k_sel, p=self.probs,
+                replace=cfg.sample_with_replacement))
+            s2 = np.asarray(server.sample_devices_onchip(
+                keys[2], n, self.k_sel, p=self.probs,
+                replace=cfg.sample_with_replacement))
+            key, env_keys = keys[0], keys[3:]
+        sel_solve = s1 if spec.num_selections < 2 else s2
+        row = {"t": t, "s1": s1, "sel_solve": sel_solve}
+        if not self.scn_trivial:
+            uniforms = {c: jax.random.uniform(ek, (n,))
+                        for c, ek in zip(channels, env_keys)}
+            t_f = jnp.float32(t)
+            sel_env = jnp.asarray(sel_solve)
+            env = realize_env(scn, cfg, n, sel_env, t_f, uniforms)
+            row["active"] = np.asarray(env.active)
+            row["work"] = np.asarray(env.work)
+            if spec.grad_source == "fresh":
+                sel_a = (jnp.asarray(s1) if spec.num_selections == 2
+                         else sel_env)
+                row["active_a"] = np.asarray(availability_mask(
+                    scn, cfg, n, sel_a, t_f, uniforms))
+        return key, row
+
+    def _init_stream_carry(self, params):
+        """The streaming carry: params + the spec's GLOBAL state only.
+        Per-client state lives host-side in ``SparseClientState``
+        stores (returned alongside), so nothing in the carry — or the
+        compiled chunk — scales with N."""
+        aux0 = init_aux(self.spec, self.cfg, params,
+                        self.num_devices, stacked=False)
+        controls_store = aux0.pop("controls", None)
+        carry = {"params": params}
+        carry.update(aux0)
+        ef_store = None
+        if self.engine._codec.error_feedback:
+            ef_store = codecs.init_ef(
+                self.engine._codec, flat_spec(params),
+                self.num_devices, stacked=False)
+        return carry, controls_store, ef_store
+
+    def _run_streaming(self, params, num_rounds: int, eval_every: int,
+                       verbose: bool, checkpoint_dir: Optional[str],
+                       sel) -> Tuple[Dict[str, List[float]], Any]:
+        """Chunked streaming run (see module docstring): host schedule
+        replication -> cohort materialization from the shard source ->
+        one jitted scan per chunk -> host scatter of state rows."""
+        cfg, spec = self.cfg, self.spec
+        chunk_rounds = cfg.chunk_rounds if cfg.chunk_rounds > 0 \
+            else num_rounds
+        t_all = np.arange(num_rounds)
+        eval_mask = (t_all % eval_every == 0) | (t_all == num_rounds - 1)
+        hist = self._new_hist()
+        intended = self.k_intended
+        n_elems = sum(int(np.prod(np.asarray(x.shape)))
+                      for x in jax.tree_util.tree_leaves(params))
+        gather_full = (float(intended)
+                       if spec.grad_source == "fresh" else 0.0)
+        carry, controls_store, ef_store = self._init_stream_carry(params)
+        stateful = controls_store is not None or ef_store is not None
+        phase2 = spec.grad_source == "fresh" and spec.num_selections == 2
+        key = jax.random.PRNGKey(cfg.seed)
+        tmap = jax.tree_util.tree_map
+        off = 0
+        while off < num_rounds:
+            # host schedule: replicate the key stream round by round.
+            # Stateful specs (controls / error feedback) truncate the
+            # chunk at the first within-chunk cohort repeat so xs state
+            # rows are never stale; the repeated round restarts the
+            # next chunk from its saved key, losing no draws.
+            rows: List[Dict[str, Any]] = []
+            seen: set = set()
+            while off + len(rows) < min(off + chunk_rounds, num_rounds):
+                t = off + len(rows)
+                key_next, row = self._stream_round(
+                    key, t, None if sel is None else sel[t])
+                ids = [int(i) for i in row["sel_solve"]]
+                if stateful and rows and not seen.isdisjoint(ids):
+                    break
+                seen.update(ids)
+                rows.append(row)
+                key = key_next
+            hi = off + len(rows)
+            # materialize ONLY the chunk's cohorts, padded to one
+            # chunk-wide bucketed batch count (padding rides valid=0
+            # masked identity steps — trajectories are exactly the
+            # stacked gather's)
+            stacks = [stack_device_batches(self.dataset, r["sel_solve"])
+                      for r in rows]
+            stacks_a = ([stack_device_batches(self.dataset, r["s1"])
+                         for r in rows] if phase2 else None)
+            nb = max(int(s[1].shape[1]) for s in stacks)
+            if stacks_a is not None:
+                nb = max(nb, max(int(s[1].shape[1]) for s in stacks_a))
+            padded = [_pad_cohort(b, v, nb) for b, v in stacks]
+            xs: Dict[str, Any] = {
+                "t": jnp.asarray([r["t"] for r in rows], jnp.int32),
+                "do_eval": jnp.asarray(eval_mask[off:hi]),
+                "b": tmap(lambda *x: jnp.stack(x),
+                          *[p[0] for p in padded]),
+                "v": jnp.stack([p[1] for p in padded])}
+            if stacks_a is not None:
+                padded_a = [_pad_cohort(b, v, nb) for b, v in stacks_a]
+                xs["ba"] = tmap(lambda *x: jnp.stack(x),
+                                *[p[0] for p in padded_a])
+                xs["va"] = jnp.stack([p[1] for p in padded_a])
+            if controls_store is not None:
+                xs["controls"] = tmap(
+                    lambda *x: jnp.stack(x),
+                    *[controls_store.gather(r["sel_solve"])
+                      for r in rows])
+            if ef_store is not None:
+                xs["ef"] = jnp.stack(
+                    [ef_store.gather(r["sel_solve"]) for r in rows])
+            if not self.scn_trivial:
+                xs["active"] = jnp.stack(
+                    [jnp.asarray(r["active"]) for r in rows])
+                xs["work"] = jnp.stack(
+                    [jnp.asarray(r["work"]) for r in rows])
+                if spec.grad_source == "fresh":
+                    xs["active_a"] = jnp.stack(
+                        [jnp.asarray(r["active_a"]) for r in rows])
+            carry, ys = self._chunk_stream(carry, xs)
+            ys_h = jax.device_get(ys)
+            # scatter updated state rows back, in round order (later
+            # rounds of the chunk never touch earlier rounds' clients —
+            # the truncation above guarantees it)
+            for i, r in enumerate(rows):
+                if controls_store is not None:
+                    controls_store.scatter(
+                        r["sel_solve"],
+                        tmap(lambda x, i=i: x[i], ys_h["controls"]))
+                if ef_store is not None:
+                    ef_store.scatter(r["sel_solve"], ys_h["ef"][i])
+            losses = np.asarray(ys_h["loss"])
+            if self.scn_trivial:
+                eff = np.full(hi - off, intended, dtype=np.float64)
+                eff_a = np.full(hi - off, gather_full, dtype=np.float64)
+            else:
+                eff = np.asarray(ys_h["effective_k"], dtype=np.float64)
+                eff_a = np.asarray(ys_h["effective_a"], dtype=np.float64)
+            self._emit_rounds(hist, off, hi, losses, eff, eff_a,
+                              eval_mask, n_elems, verbose)
+            if checkpoint_dir is not None:
+                from repro.checkpoint.store import save_checkpoint
+                save_checkpoint(checkpoint_dir,
+                                {"params": carry["params"], "round": hi},
+                                step=hi)
+            off = hi
+        return hist, carry["params"]
+
     # -- host-side chunked run --------------------------------------------
+
+    def _new_hist(self) -> Dict[str, List[float]]:
+        """The run-history dict both drivers fill (one schema)."""
+        hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
+                                        "loss": [], "intended_k": [],
+                                        "effective_k": [], "dropped": [],
+                                        "bytes_up": [], "bytes_down": []}
+        if self.mesh is not None:
+            # layout telemetry: 1.0 when the stacked client tensors
+            # shard over the mesh, 0.0 on the replicated N % D fallback
+            hist["sharded"] = []
+        return hist
+
+    def _emit_rounds(self, hist, off: int, hi: int, losses, eff, eff_a,
+                     eval_mask, n_elems: int, verbose: bool) -> None:
+        """Append one chunk's realized telemetry + eval points to the
+        run history (shared by the stacked and streaming runs)."""
+        cfg = self.cfg
+        intended = self.k_intended
+        for i, t in enumerate(range(off, hi)):
+            if self.mesh is not None:
+                hist["sharded"].append(
+                    1.0 if self._layout_sharded else 0.0)
+            hist["intended_k"].append(float(intended))
+            hist["effective_k"].append(float(eff[i]))
+            hist["dropped"].append(float(intended - eff[i]))
+            up, down = codecs.round_bytes(
+                self.spec, self.engine._codec, cfg, n_elems,
+                float(eff_a[i]), float(eff[i]))
+            hist["bytes_up"].append(up)
+            hist["bytes_down"].append(down)
+            if not eval_mask[t]:
+                continue
+            hist["round"].append(t + 1)
+            hist["comm_rounds"].append((t + 1) * self.comm_per_round)
+            hist["loss"].append(float(losses[i]))
+            if verbose:
+                print(f"[{cfg.algorithm}] round {t + 1:4d} "
+                      f"comm {(t + 1) * self.comm_per_round:4d} "
+                      f"loss {float(losses[i]):.4f}")
 
     def _init_carry(self, params) -> Dict[str, Any]:
         """The scan carry: params + PRNG key + the spec's persistent
@@ -820,18 +1181,14 @@ class ScannedDriver:
                 raise ValueError(
                     f"selections covers {sel.shape[0]} rounds "
                     f"< num_rounds={num_rounds}")
+        if self.streaming:
+            return self._run_streaming(params, num_rounds, eval_every,
+                                       verbose, checkpoint_dir, sel)
         chunk_rounds = cfg.chunk_rounds if cfg.chunk_rounds > 0 \
             else num_rounds
         t_all = np.arange(num_rounds)
         eval_mask = (t_all % eval_every == 0) | (t_all == num_rounds - 1)
-        hist: Dict[str, List[float]] = {"round": [], "comm_rounds": [],
-                                        "loss": [], "intended_k": [],
-                                        "effective_k": [], "dropped": [],
-                                        "bytes_up": [], "bytes_down": []}
-        if self.mesh is not None:
-            # layout telemetry: 1.0 when the all-client tensors shard
-            # over the mesh, 0.0 on the replicated N % D fallback
-            hist["sharded"] = []
+        hist = self._new_hist()
         intended = self.k_intended
         # wire bytes per round (codecs.round_bytes): reconstructed
         # host-side from the scan's realized participation telemetry
@@ -859,27 +1216,8 @@ class ScannedDriver:
                 losses = np.asarray(ys["loss"])
                 eff = np.asarray(ys["effective_k"], dtype=np.float64)
                 eff_a = np.asarray(ys["effective_a"], dtype=np.float64)
-            for i, t in enumerate(range(off, hi)):
-                if self.mesh is not None:
-                    hist["sharded"].append(
-                        1.0 if self._layout_sharded else 0.0)
-                hist["intended_k"].append(float(intended))
-                hist["effective_k"].append(float(eff[i]))
-                hist["dropped"].append(float(intended - eff[i]))
-                up, down = codecs.round_bytes(
-                    self.spec, self.engine._codec, cfg, n_elems,
-                    float(eff_a[i]), float(eff[i]))
-                hist["bytes_up"].append(up)
-                hist["bytes_down"].append(down)
-                if not eval_mask[t]:
-                    continue
-                hist["round"].append(t + 1)
-                hist["comm_rounds"].append((t + 1) * self.comm_per_round)
-                hist["loss"].append(float(losses[i]))
-                if verbose:
-                    print(f"[{cfg.algorithm}] round {t + 1:4d} "
-                          f"comm {(t + 1) * self.comm_per_round:4d} "
-                          f"loss {float(losses[i]):.4f}")
+            self._emit_rounds(hist, off, hi, losses, eff, eff_a,
+                              eval_mask, n_elems, verbose)
             if checkpoint_dir is not None:
                 from repro.checkpoint.store import save_checkpoint
                 save_checkpoint(checkpoint_dir,

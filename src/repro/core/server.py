@@ -70,6 +70,15 @@ def sample_devices_onchip(key, num_devices: int, k: int, p=None,
         k = min(k, num_devices)
     if p is not None:
         p = jnp.asarray(p, jnp.float32)
+        # Population-scale guard: raw client weights can overflow (sum
+        # of 1e6 huge weights -> inf) or vanish (denormal sizes) before
+        # the normalizing division.  Pre-scale by the max ONLY in the
+        # extreme regimes so every in-range weight vector keeps its
+        # exact pre-guard bits (x / 1.0 is an identity in IEEE754),
+        # preserving pinned scan-driver selection trajectories.
+        m = p.max()
+        scale = jnp.where((m > 1e30) | (m < 1e-30), m, 1.0)
+        p = p / scale
         p = p / p.sum()
     if replace:
         return jax.random.choice(key, num_devices, (k,), replace=True, p=p)
@@ -96,30 +105,35 @@ def aggregate_gradients(grads: List) -> object:
     return pt.mean(grads)
 
 
-def aggregate_stacked(tree, axis_name: Optional[str] = None) -> object:
+def aggregate_stacked(tree, axis_name=None) -> object:
     """Mean over a leading device axis of a stacked pytree — the batched
     round engine's form of ``aggregate_mean``/``aggregate_gradients``
     (stays on device, no per-update host transfers).
 
     ``axis_name``: inside a ``shard_map`` over the client axis
     (core/sharding.py), the stacked leaves hold only this shard's K/D
-    rows; the local mean is then ``pmean``-ed over the named mesh axis.
-    Shards carry equal row counts (engine-enforced divisibility), so
-    the mean-of-shard-means equals the global mean exactly (to float
-    association).  ``None`` (single-device) is the pre-mesh program,
-    bit-identical.
+    rows; the local mean is then ``pmean``-ed over the named mesh
+    ax(es) — a single name for the flat 1-D mesh, the ``(edge,
+    device)`` tuple for the hierarchical aggregation tree, where the
+    reduction runs leaf-to-edge then edge-to-server
+    (``sharding.tree_pmean``).  Shards carry equal row counts
+    (engine-enforced divisibility), so the mean-of-shard-means equals
+    the global mean exactly (to float association).  ``None``
+    (single-device) is the pre-mesh program, bit-identical.
     """
     import jax
+
+    from repro.core import sharding
 
     out = jax.tree_util.tree_map(lambda x: x.mean(axis=0), tree)
     if axis_name is not None:
         out = jax.tree_util.tree_map(
-            lambda x: jax.lax.pmean(x, axis_name), out)
+            lambda x: sharding.tree_pmean(x, axis_name), out)
     return out
 
 
 def aggregate_stacked_masked(tree, active, fallback,
-                             axis_name: Optional[str] = None) -> object:
+                             axis_name=None) -> object:
     """Scenario-aware ``aggregate_stacked``: mean over the devices with
     ``active[k] == 1`` only (stacked leading axis K, ``active`` a float
     0/1 ``(K,)`` vector).  Inactive rows contribute exact zeros, so the
@@ -130,23 +144,27 @@ def aggregate_stacked_masked(tree, active, fallback,
 
     ``axis_name``: as in :func:`aggregate_stacked` — under ``shard_map``
     the masked partial sums (numerator AND active count) are ``psum``-ed
-    over the mesh axis before the division, so the global masked mean
-    (and the no-active-device fallback decision) is exact regardless of
-    how the active clients distribute over shards.
+    over the mesh ax(es) before the division (nested leaf-to-edge then
+    edge-to-server collectives under the tree mesh via
+    ``sharding.tree_psum``), so the global masked mean (and the
+    no-active-device fallback decision) is exact regardless of how the
+    active clients distribute over shards.
     """
     import jax
     import jax.numpy as jnp
 
+    from repro.core import sharding
+
     asum = active.sum()
     if axis_name is not None:
-        asum = jax.lax.psum(asum, axis_name)
+        asum = sharding.tree_psum(asum, axis_name)
     denom = jnp.maximum(asum, 1.0)
 
     def mmean(x, fb):
         a = active.reshape(active.shape + (1,) * (x.ndim - 1))
         s = (x * a).sum(axis=0)
         if axis_name is not None:
-            s = jax.lax.psum(s, axis_name)
+            s = sharding.tree_psum(s, axis_name)
         return jnp.where(asum > 0, s / denom, fb)
 
     return jax.tree_util.tree_map(mmean, tree, fallback)
@@ -192,23 +210,27 @@ def aggregate_buffered(deltas, weights, axis_name=None):
 
     ``axis_name``: inside a ``shard_map``-ed commit the buffer axis is
     sharded over the mesh — the weighted numerator and the weight sum
-    are both ``psum``-ed over ``axis_name`` before the single division,
-    so the sharded commit equals the unsharded weighted mean (padded
-    lanes carry weight 0 and drop out of both sums).
+    are both ``psum``-ed over ``axis_name`` (a name or the tree mesh's
+    axis tuple, reduced leaf-to-edge then edge-to-server) before the
+    single division, so the sharded commit equals the unsharded
+    weighted mean (padded lanes carry weight 0 and drop out of both
+    sums).
     """
     import jax
     import jax.numpy as jnp
 
+    from repro.core import sharding
+
     wsum = weights.sum()
     if axis_name is not None:
-        wsum = jax.lax.psum(wsum, axis_name)
+        wsum = sharding.tree_psum(wsum, axis_name)
     wsum = jnp.maximum(wsum, 1e-12)
 
     def wmean(x):
         w = weights.reshape(weights.shape + (1,) * (x.ndim - 1))
         num = (x * w).sum(axis=0)
         if axis_name is not None:
-            num = jax.lax.psum(num, axis_name)
+            num = sharding.tree_psum(num, axis_name)
         return num / wsum
 
     return jax.tree_util.tree_map(wmean, deltas)

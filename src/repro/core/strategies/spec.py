@@ -285,8 +285,11 @@ def init_aux(spec: AlgorithmSpec, cfg, params, num_devices: int,
     """Initial persistent state for (spec, cfg) as a dict.
 
     ``stacked=True`` lays controls out as one ``(N, ...)`` stacked
-    pytree (batched / scanned paths); ``stacked=False`` as a list of N
-    per-device pytrees (host loop).  ``center`` starts as a *copy* of
+    pytree (batched / scanned paths); ``stacked=False`` as a
+    :class:`~repro.core.client_state.SparseClientState` keyed by
+    client id (host loop / buffered / streaming paths) — reads of
+    never-selected clients return a shared zero template, so memory is
+    O(clients touched), not O(N).  ``center`` starts as a *copy* of
     ``params`` so donation of round state never invalidates the
     caller's initial-parameter buffers.
     """
@@ -303,8 +306,9 @@ def init_aux(spec: AlgorithmSpec, cfg, params, num_devices: int,
                     lambda x: jnp.zeros((num_devices,) + x.shape, x.dtype),
                     params)
             else:
-                aux["controls"] = [pt.zeros_like(params)
-                                   for _ in range(num_devices)]
+                from repro.core.client_state import SparseClientState
+                aux["controls"] = SparseClientState(
+                    num_devices, pt.zeros_like(params))
         elif f == "opt":
             aux["opt"] = make_server_opt(spec, cfg).init(params)
     return aux

@@ -2,6 +2,12 @@
 from repro.data.batching import FederatedData, pad_to_batches
 from repro.data.leaf_like import (make_femnist_like, make_sent140_like,
                                   make_shakespeare_like)
+from repro.data.shard_source import (ClientShardSource,
+                                     FemnistShardSource,
+                                     SyntheticShardSource,
+                                     make_femnist_stream,
+                                     make_synthetic_stream,
+                                     resolve_streaming)
 from repro.data.synthetic import (generate_synthetic, make_synthetic,
                                   paper_synthetic_suite)
 
@@ -9,4 +15,6 @@ __all__ = [
     "FederatedData", "pad_to_batches",
     "make_synthetic", "generate_synthetic", "paper_synthetic_suite",
     "make_femnist_like", "make_sent140_like", "make_shakespeare_like",
+    "ClientShardSource", "SyntheticShardSource", "FemnistShardSource",
+    "make_synthetic_stream", "make_femnist_stream", "resolve_streaming",
 ]

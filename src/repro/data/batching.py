@@ -118,7 +118,8 @@ class FederatedData:
 
     def __init__(self, device_data: List[Dict[str, np.ndarray]],
                  batch_size: int, bucket: bool = True,
-                 eval_batch_limit: Optional[int] = None, name: str = ""):
+                 eval_batch_limit: Optional[int] = None, name: str = "",
+                 eval_sample: Optional[int] = None, eval_seed: int = 0):
         self.name = name
         self.batch_size = batch_size
         self.num_devices = len(device_data)
@@ -128,6 +129,9 @@ class FederatedData:
         self._batches = [pad_to_batches(d, batch_size, bucket)
                          for d in device_data]
         self._eval_limit = eval_batch_limit
+        self._eval_sample = eval_sample
+        self._eval_seed = eval_seed
+        self._eval_ids: Optional[np.ndarray] = None
         self._pad_cache: Dict[int, dict] = {}
 
     def device_batches(self, k: int):
@@ -154,8 +158,27 @@ class FederatedData:
             return cached
         return jax.tree_util.tree_map(lambda x: x[:nb], cached)
 
+    def eval_ids(self) -> np.ndarray:
+        """The devices ``eval_batches`` iterates: all of them, or — with
+        ``eval_sample`` set below ``num_devices`` — a fixed seeded
+        uniform sample without replacement, in id order.  This is the
+        dense container's sampled eval path, mirroring the streaming
+        sources' bounded ``eval_clients`` contract so neither the host
+        eval loop nor ``stack_eval_batches`` is forced through an
+        all-N pass when only a loss estimate is needed."""
+        if self._eval_ids is None:
+            if (self._eval_sample is None
+                    or self._eval_sample >= self.num_devices):
+                self._eval_ids = np.arange(self.num_devices)
+            else:
+                rng = np.random.default_rng([self._eval_seed, 0xE7A1])
+                self._eval_ids = np.sort(rng.choice(
+                    self.num_devices, size=self._eval_sample,
+                    replace=False))
+        return self._eval_ids
+
     def eval_batches(self) -> Iterable[Tuple[float, dict]]:
-        for k in range(self.num_devices):
+        for k in self.eval_ids():
             b = self._batches[k]
             if self._eval_limit is not None:
                 b = {key: v[: self._eval_limit] for key, v in b.items()}

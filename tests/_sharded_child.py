@@ -25,6 +25,15 @@ Checks, all at atol 1e-5 over 3 rounds with injected selections:
   spec (sequential occurrence layers);
 - the scanned driver's replicated fallback when the client-state axis
   does not divide the mesh: still correct, ``sharded: 0.0`` telemetry;
+- the hierarchical aggregation tree: ``edge_shards`` in {2, 4}
+  regroups the same 8 leaf devices into a 2-D ``(edge, device)`` mesh
+  whose nested psum levels must match both the flat 8-mesh and the
+  single-device program (mean-of-edge-means is exact at equal shard
+  counts); a codec case pins ``linear_shard_index``'s row-major slot
+  offsets through the tree, a bernoulli case the masked tree psums, a
+  buffered case the tree-reduced commit, and ``edge_shards=1`` must be
+  byte-identical to the flat mesh; the no-mesh/indivisible edge error
+  paths raise;
 - ``mesh_devices="auto"`` resolves to the full 8-way mesh;
 - the error paths that need >1 device: indivisible selection size and
   the config-time loop-engine conflict.
@@ -162,6 +171,58 @@ def main() -> None:
             f"{h1['bytes_down']} vs {h8['bytes_down']}")
         print(f"ok bytes {codec}: up {h8['bytes_up']}")
 
+    # hierarchical aggregation tree: the same 8 leaf devices regrouped
+    # under 2 or 4 edge aggregators — nested (edge, device) collectives
+    # must reproduce the flat mesh and the single-device program
+    for algo in ("feddane", "scaffold"):
+        for driver in ("python", "scan"):
+            _, f1 = run(algo, 1, driver=driver)
+            _, f8 = run(algo, 8, driver=driver)
+            for edge in (2, 4):
+                _, ft = run(algo, 8, driver=driver, edge_shards=edge)
+                d_flat = leaves_maxdiff(f8, ft)
+                d_one = leaves_maxdiff(f1, ft)
+                assert d_flat < ATOL and d_one < ATOL, (
+                    f"tree {algo}/{driver}/edge={edge}: diverged "
+                    f"(vs flat {d_flat:.2e}, vs mesh=1 {d_one:.2e})")
+                print(f"ok tree {algo} {driver} edge={edge}: "
+                      f"flat {d_flat:.2e} mesh1 {d_one:.2e}")
+
+    # edge_shards=1 is structurally the flat 1-D mesh: bit-identical
+    _, f8 = run("feddane", 8, driver="scan")
+    _, fe1 = run("feddane", 8, driver="scan", edge_shards=1)
+    assert leaves_maxdiff(f8, fe1) == 0.0, "edge_shards=1 != flat mesh"
+    print("ok edge_shards=1 == flat mesh (bitwise)")
+
+    # codec through the tree: per-shard partial dequantize + nested
+    # psum, cohort slot offsets from linear_shard_index's row-major
+    # flattening of the (edge, device) coordinates.  Tolerance note:
+    # quantize/sparsify are DISCONTINUOUS in their input, and the tree
+    # legitimately reassociates the pre-codec float sums (~1e-8), so a
+    # coordinate near a rounding boundary can flip one quantization
+    # bucket (~1 int8 step ~ 1e-5/round).  The gate is therefore a few
+    # quantization steps — a broken slot mapping changes EVERY
+    # per-client dither draw and lands orders of magnitude above it.
+    for codec in ("int8", "topk"):
+        h8, f8 = run("feddane", 8, driver="scan", codec=codec)
+        ht, ft = run("feddane", 8, driver="scan", codec=codec,
+                     edge_shards=2)
+        dmax = leaves_maxdiff(f8, ft)
+        assert dmax < 1e-3, (
+            f"tree codec {codec}: diverged ({dmax:.2e})")
+        assert h8["bytes_up"] == ht["bytes_up"], (
+            f"tree codec {codec}: bytes_up diverged")
+        print(f"ok tree codec {codec}: params {dmax:.2e}")
+
+    # masked aggregation through the tree (bernoulli availability)
+    _, f8 = run("feddane", 8, driver="scan",
+                scenario="bernoulli", avail_prob=0.6)
+    _, ft = run("feddane", 8, driver="scan", edge_shards=2,
+                scenario="bernoulli", avail_prob=0.6)
+    dmax = leaves_maxdiff(f8, ft)
+    assert dmax < ATOL, f"tree bernoulli diverged ({dmax:.2e})"
+    print(f"ok tree bernoulli: params {dmax:.2e}")
+
     # the scanned driver keeps sharded layout telemetry honest: N=16
     # divides the 8-mesh -> every round reports sharded 1.0
     h8, _ = run("feddane", 8, driver="scan")
@@ -235,6 +296,29 @@ def main() -> None:
     assert dmax < ATOL, (
         f"buffered mesh duplicates diverged ({dmax:.2e})")
     print(f"ok buffered mesh duplicates: params {dmax:.2e}")
+
+    # buffered commits reduced through the tree == the python loop
+    _, fp = run_py("feddane", sel)
+    _, fb = run_buf("feddane", 8, sel, edge_shards=2)
+    dmax = leaves_maxdiff(fp, fb)
+    assert dmax < ATOL, f"buffered tree diverged ({dmax:.2e})"
+    print(f"ok buffered tree edge=2: params {dmax:.2e}")
+
+    # tree error paths (config- or trainer-time, whichever fires
+    # first): an edge count that does not divide the mesh, and edge
+    # aggregators without a real mesh to group
+    for bad in (dict(mesh_devices=8, edge_shards=3),
+                dict(mesh_devices=1, edge_shards=2)):
+        try:
+            cfg = FederatedConfig(algorithm="fedavg", num_devices=N,
+                                  devices_per_round=K,
+                                  engine="batched", **bad)
+            FederatedTrainer(logreg_loss, dataset, cfg)
+        except ValueError as e:
+            assert "edge_shards" in str(e), e
+            print(f"ok bad tree config raises: {bad}")
+        else:
+            raise AssertionError(f"{bad} did not raise")
 
     # error paths that need a real multi-device mesh
     cfg = FederatedConfig(algorithm="fedavg", num_devices=N,

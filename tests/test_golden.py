@@ -30,7 +30,7 @@ import pytest
 from repro.configs.base import FederatedConfig
 from repro.core import FederatedTrainer
 from repro.core.strategies import available_algorithms
-from repro.data import make_synthetic
+from repro.data import make_synthetic, make_synthetic_stream
 from repro.models.param import init_params
 from repro.models.small import logreg_loss, logreg_specs
 
@@ -91,3 +91,58 @@ def test_loss_history_matches_golden(setup, algo, update_golden):
             f"`PYTHONPATH=src python -m pytest tests/test_golden.py "
             f"--update-golden` and say so in the PR; if not, you just "
             f"caught a silent numerics regression."))
+
+
+# -- streaming-source goldens (additive; the fixtures above are the
+# -- ideal-scenario pin on the dense container and stay untouched) ----------
+
+STREAM_DATASET_KW = dict(alpha=0.5, beta=0.5, num_devices=6, seed=4)
+
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    src = make_synthetic_stream(**STREAM_DATASET_KW)
+    params = init_params(logreg_specs(60, 10), jax.random.PRNGKey(0))
+    return src, params
+
+
+@pytest.mark.parametrize("algo", available_algorithms())
+def test_streaming_loss_history_matches_golden(stream_setup, algo,
+                                               update_golden):
+    """The same absolute-numbers pin over a ClientShardSource: the
+    streaming generators are a distinct seed-per-client data draw (see
+    data/shard_source.py), so these fixtures are NEW files
+    (``streaming_<algo>.json``) — the dense goldens above must keep
+    reproducing bit-for-bit alongside them."""
+    src, params = stream_setup
+    cfg = FederatedConfig(algorithm=algo, **BASE_KW)
+    tr = FederatedTrainer(logreg_loss, src, cfg)
+    hist, _ = tr.run(params, ROUNDS, eval_every=1)
+    path = GOLDEN_DIR / f"streaming_{algo}.json"
+    record = {"algorithm": algo, "rounds": ROUNDS,
+              "dataset": "synthetic_stream(0.5,0.5) N=6 seed=4",
+              "config": {k: v for k, v in BASE_KW.items()},
+              "round": hist["round"], "comm_rounds": hist["comm_rounds"],
+              "loss": hist["loss"]}
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(record, indent=2) + "\n")
+        return
+    if not path.exists():
+        pytest.fail(
+            f"no streaming golden fixture for {algo!r} ({path}); "
+            f"generate it with `PYTHONPATH=src python -m pytest "
+            f"tests/test_golden.py --update-golden` and commit it")
+    ref = json.loads(path.read_text())
+    assert ref["config"] == record["config"], (
+        f"streaming golden for {algo!r} was generated under a different "
+        f"reference config; regenerate with --update-golden")
+    assert ref["round"] == hist["round"]
+    assert ref["comm_rounds"] == hist["comm_rounds"]
+    np.testing.assert_allclose(
+        hist["loss"], ref["loss"], rtol=1e-6, atol=1e-8,
+        err_msg=(
+            f"{algo!r} streaming loss history drifted from the pinned "
+            f"golden ({path}).  If intentional, regenerate via "
+            f"--update-golden and say so in the PR; if not, this is a "
+            f"silent numerics regression in the streaming source."))

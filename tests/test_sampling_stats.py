@@ -125,6 +125,95 @@ def test_bernoulli_availability_composes_with_both_samplers():
         assert np.all(np.abs(eff - inc * q) < 5.0 * sd)
 
 
+def test_population_scale_gumbel_chi_square():
+    """Gumbel-top-k at the paper's honest scale (N=1e6, K<<N): the
+    realized inclusion marginals over equal-mass device buckets must
+    follow the weights.  At K/N ~ 1e-5 the without-replacement marginal
+    is K * p_k to first order, so with ~equal-mass buckets the expected
+    counts are flat; the chi-square against them is deterministic under
+    the fixed seed (crit. value at df=15, 99.9% is 37.7)."""
+    n, k, rounds, buckets = 1_000_000, 16, 256, 16
+    rng = np.random.default_rng(0)
+    w = rng.lognormal(0.0, 1.5, n)
+    p = w / w.sum()
+    # equal-probability-mass contiguous id buckets
+    cum = np.cumsum(p)
+    edges = np.searchsorted(cum, np.arange(1, buckets) / buckets)
+    bucket_of = jnp.asarray(np.digitize(np.arange(n), edges), jnp.int32)
+    mass = np.diff(np.concatenate([[0.0], cum[edges - 1], [1.0]]))
+    pj = jnp.asarray(p, jnp.float32)
+
+    def body(counts, key):
+        sel = server.sample_devices_onchip(key, n, k, p=pj,
+                                           replace=False)
+        return counts.at[bucket_of[sel]].add(1.0), None
+
+    keys = jax.random.split(jax.random.PRNGKey(7), rounds)
+    counts, _ = jax.lax.scan(body, jnp.zeros(buckets), keys)
+    counts = np.asarray(counts, np.float64)
+    assert counts.sum() == rounds * k
+    expected = rounds * k * mass
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 40.0, (chi2, counts, expected)
+
+
+def _assert_valid_selection(sel, n, k, replace):
+    sel = np.asarray(sel)
+    assert sel.shape == (k,)
+    assert ((0 <= sel) & (sel < n)).all(), sel
+    if not replace:
+        assert len(np.unique(sel)) == k, sel
+
+
+def test_sampler_guard_overflow_weights():
+    """Population-scale guard: raw client weights whose SUM overflows
+    float32 (a handful of ~1e38 entries, or 1e6 moderate ones) must
+    still yield valid, weight-respecting selections — the max-rescale
+    kicks in instead of p / inf -> 0/NaN."""
+    n, k = 1024, 8
+    w = jnp.asarray(np.geomspace(1e30, 3e38, n), jnp.float32)
+    # the naive float32 normalization really is broken for this input
+    with np.errstate(over="ignore"):
+        assert np.float32(np.asarray(w, np.float64).sum()) == np.inf
+    for replace in (False, True):
+        sel = server.sample_devices_onchip(
+            jax.random.PRNGKey(3), n, k, p=w, replace=replace)
+        _assert_valid_selection(sel, n, k, replace)
+    # the mass is astronomically top-heavy: selections concentrate there
+    sel = server.sample_devices_onchip(jax.random.PRNGKey(3), n, k, p=w)
+    assert np.asarray(sel).min() > n // 2, sel
+
+
+def test_sampler_guard_underflow_weights():
+    """Denormal-regime weights (sum underflows to 0 in float32): the
+    guard rescales by the max so normalization stays finite."""
+    n, k = 1024, 8
+    w = jnp.asarray(np.geomspace(1e-38, 1e-32, n), jnp.float32)
+    for replace in (False, True):
+        sel = server.sample_devices_onchip(
+            jax.random.PRNGKey(5), n, k, p=w, replace=replace)
+        _assert_valid_selection(sel, n, k, replace)
+
+
+def test_sampler_guard_preserves_normal_regime_bits():
+    """In the normal regime the guard divides by exactly 1.0 (an IEEE
+    identity), so selections are bit-identical to the pre-guard
+    normalize — the pinned scan-driver trajectories cannot move."""
+    n, k = 64, 8
+    p32 = jnp.asarray(WEIGHTS.repeat(8), jnp.float32)
+    key = jax.random.PRNGKey(11)
+
+    def unguarded(key, p):
+        p = p / p.sum()
+        gumbel = jax.random.gumbel(key, (n,))
+        return jax.lax.top_k(gumbel + jnp.log(jnp.maximum(p, 1e-30)),
+                             k)[1]
+
+    got = server.sample_devices_onchip(key, n, k, p=p32)
+    want = unguarded(key, p32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_realize_env_bernoulli_matches_direct_thinning():
     """The scenario interpreter's availability gate is exactly the
     u < avail_prob Bernoulli thinning the composition tests model."""

@@ -70,6 +70,45 @@ def test_oversized_mesh_fails_at_trainer_build():
         FederatedTrainer(logreg_loss, dataset, cfg)
 
 
+# -- hierarchical tree mesh: resolution & helper semantics -----------------
+
+def test_axis_name_tuple_normalizes():
+    assert sharding.axis_name_tuple("device") == ("device",)
+    assert sharding.axis_name_tuple(("edge", "device")) == \
+        ("edge", "device")
+
+
+def test_num_shards_counts_all_axes():
+    assert sharding.num_shards(None) == 1
+    assert sharding.num_shards(sharding.make_device_mesh(1)) == 1
+
+
+def test_make_device_mesh_rejects_indivisible_edge():
+    with pytest.raises(ValueError, match="edge_shards"):
+        sharding.make_device_mesh(jax.device_count(),
+                                  edge_shards=jax.device_count() + 1)
+
+
+def test_mesh_for_rejects_edge_without_mesh():
+    with pytest.raises(ValueError, match="edge_shards"):
+        sharding.mesh_for(FederatedConfig(mesh_devices=1,
+                                          edge_shards=2))
+
+
+@pytest.mark.parametrize("bad", [0, -2])
+def test_config_rejects_bad_edge_shards(bad):
+    with pytest.raises(ValueError):
+        FederatedConfig(edge_shards=bad)
+
+
+def test_mesh_axes_and_stacked_spec_flat():
+    mesh = sharding.make_device_mesh(1)
+    assert sharding.mesh_axes(None) is None
+    assert sharding.mesh_axes(mesh) == sharding.DEVICE_AXIS
+    assert sharding.stacked_spec(mesh) == \
+        sharding.PartitionSpec(sharding.DEVICE_AXIS)
+
+
 # -- mesh_devices=1 is structurally the pre-mesh build ---------------------
 
 def test_mesh_devices_one_builds_no_mesh():
